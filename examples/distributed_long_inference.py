@@ -1,0 +1,61 @@
+"""Paper Figs 12-13 story: Dynamic-Axial-Parallel distributed inference over
+long sequences — per-device activation memory drops ~linearly with DAP degree,
+which is what lets FastFold fold >3k-residue proteins that OOM single-device.
+
+Runs the DAP Evoformer on 4 simulated host devices:
+
+  PYTHONPATH=src python examples/distributed_long_inference.py --n-res 96
+"""
+import argparse
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+INNER = r"""
+import time, jax, jax.numpy as jnp
+from repro.core.evoformer import EvoformerConfig, init_evoformer_stack, evoformer_stack
+from repro.core.dap import dap_evoformer_stack, shard_dap_inputs
+N_RES = {n_res}
+cfg = EvoformerConfig(d_msa=64, d_pair=32, msa_heads=4, pair_heads=2, head_dim=16,
+                      opm_dim=16, tri_mult_dim=32, n_blocks=2)
+params = init_evoformer_stack(jax.random.PRNGKey(0), cfg)
+B, s = 1, 8
+msa = jax.random.normal(jax.random.PRNGKey(1), (B, s, N_RES, cfg.d_msa), jnp.bfloat16)
+pair = jax.random.normal(jax.random.PRNGKey(2), (B, N_RES, N_RES, cfg.d_pair), jnp.bfloat16)
+masks = (jnp.ones((B, s, N_RES)), jnp.ones((B, N_RES)), jnp.ones((B, N_RES, N_RES)))
+ndev = len(jax.devices())
+mesh = jax.make_mesh((1, ndev), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+fn = jax.jit(dap_evoformer_stack(mesh, cfg, remat=False))
+args = shard_dap_inputs(mesh, msa, pair, *masks)
+compiled = fn.lower(params, *args).compile()
+mem = compiled.memory_analysis()
+t0 = time.time(); out = fn(params, *args); jax.block_until_ready(out)
+print(f"devices={{ndev}} n_res={{N_RES}} "
+      f"per-device peak activation bytes={{mem.peak_memory_in_bytes:,}} "
+      f"wall={{time.time()-t0:.2f}}s")
+"""
+
+
+def run(ndev: int, n_res: int):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", INNER.format(n_res=n_res)],
+                         env=env, capture_output=True, text=True, timeout=900)
+    print(out.stdout.strip() or out.stderr[-400:])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-res", type=int, default=96)
+    args = ap.parse_args()
+    print("DAP distributed inference — per-device memory vs DAP degree")
+    for ndev in (1, 2, 4):
+        run(ndev, args.n_res)
+
+
+if __name__ == "__main__":
+    main()

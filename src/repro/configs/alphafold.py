@@ -1,0 +1,43 @@
+"""AlphaFold model configs (paper Table I): Initial Training and Fine-tuning,
+plus the reduced smoke/benchmark variants used on CPU."""
+from __future__ import annotations
+
+from dataclasses import replace
+
+from repro.core.alphafold import AlphaFoldConfig
+from repro.core.evoformer import EvoformerConfig
+from repro.core.structure import StructureConfig
+
+# Full AlphaFold-2 model: 48 Evoformer blocks, Hm=256, Hz=128 (~93M params).
+FULL = AlphaFoldConfig(
+    evoformer=EvoformerConfig(d_msa=256, d_pair=128, msa_heads=8, pair_heads=4,
+                              head_dim=32, opm_dim=32, tri_mult_dim=128,
+                              n_blocks=48),
+    structure=StructureConfig(c_s=384, c_z=128, n_heads=12, c_hidden=16,
+                              n_qk_points=4, n_v_points=8, n_iterations=8),
+    n_recycle=3,
+)
+
+# Paper Table I shapes.
+INITIAL_TRAINING = {"n_res": 256, "n_seq": 128, "batch": 128}
+FINE_TUNING = {"n_res": 384, "n_seq": 512, "batch": 128}
+
+# ~100M-param config trainable on CPU for the end-to-end example: same family,
+# fewer blocks / smaller MSA stack.
+MINI = AlphaFoldConfig(
+    evoformer=EvoformerConfig(d_msa=64, d_pair=32, msa_heads=4, pair_heads=2,
+                              head_dim=16, opm_dim=16, tri_mult_dim=32,
+                              n_blocks=4),
+    structure=StructureConfig(c_s=64, c_z=32, n_heads=4, c_hidden=8,
+                              n_qk_points=4, n_v_points=4, n_iterations=4),
+    n_recycle=1,
+)
+
+SMOKE = AlphaFoldConfig(
+    evoformer=EvoformerConfig(d_msa=32, d_pair=16, msa_heads=4, pair_heads=2,
+                              head_dim=8, opm_dim=8, tri_mult_dim=16,
+                              n_blocks=2),
+    structure=StructureConfig(c_s=32, c_z=16, n_heads=4, c_hidden=8,
+                              n_qk_points=2, n_v_points=2, n_iterations=2),
+    n_recycle=1,
+)

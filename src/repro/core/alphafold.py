@@ -1,0 +1,177 @@
+"""End-to-end AlphaFold-2 model: embedders, recycling, Evoformer trunk (DAP-
+parallelizable), structure module, and training heads."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dist import LocalDist
+from repro.core.evoformer import (
+    EvoformerConfig,
+    evoformer_stack,
+    init_evoformer_stack,
+)
+from repro.core.losses import N_DIST_BINS, N_MSA_TOK, alphafold_loss
+from repro.core.structure import (
+    StructureConfig,
+    init_structure_module,
+    structure_module,
+)
+from repro.layers.norms import init_layer_norm, layer_norm
+from repro.layers.params import Params, dense, init_dense
+
+N_AA = 21
+RELPOS_K = 32
+
+
+@dataclass(frozen=True)
+class AlphaFoldConfig:
+    evoformer: EvoformerConfig = field(default_factory=EvoformerConfig)
+    structure: StructureConfig = field(default_factory=StructureConfig)
+    n_recycle: int = 3          # extra passes (total passes = n_recycle + 1)
+    recycle_bins: int = 15
+    compute_dtype: Any = jnp.bfloat16
+
+    @property
+    def d_msa(self):
+        return self.evoformer.d_msa
+
+    @property
+    def d_pair(self):
+        return self.evoformer.d_pair
+
+
+def init_alphafold(key, cfg: AlphaFoldConfig) -> Params:
+    ks = iter(jax.random.split(key, 16))
+    d_m, d_z = cfg.d_msa, cfg.d_pair
+    return {
+        "msa_embed": init_dense(next(ks), N_MSA_TOK, d_m, bias=True),
+        "target_embed_m": init_dense(next(ks), N_AA, d_m, bias=True),
+        "left_embed": init_dense(next(ks), N_AA, d_z, bias=True),
+        "right_embed": init_dense(next(ks), N_AA, d_z, bias=True),
+        "relpos_embed": init_dense(next(ks), 2 * RELPOS_K + 1, d_z, bias=True),
+        "recycle": {
+            "ln_m": init_layer_norm(d_m),
+            "ln_z": init_layer_norm(d_z),
+            "dist_embed": init_dense(next(ks), cfg.recycle_bins, d_z, bias=True),
+        },
+        "evoformer": init_evoformer_stack(next(ks), cfg.evoformer),
+        "single_proj": init_dense(next(ks), d_m, cfg.structure.c_s, bias=True),
+        "structure": init_structure_module(next(ks), cfg.structure),
+        "msa_head": init_dense(next(ks), d_m, N_MSA_TOK, bias=True),
+        "dist_head": init_dense(next(ks), d_z, N_DIST_BINS, bias=True),
+    }
+
+
+def embed_inputs(params, batch, cfg: AlphaFoldConfig):
+    """batch: dict with msa (B,s,r) int, aatype (B,r) int, residue_index (B,r)."""
+    dt = cfg.compute_dtype
+    msa_oh = jax.nn.one_hot(batch["msa"], N_MSA_TOK, dtype=dt)
+    aa_oh = jax.nn.one_hot(batch["aatype"], N_AA, dtype=dt)
+    msa_rep = dense(params["msa_embed"], msa_oh)
+    msa_rep = msa_rep + dense(params["target_embed_m"], aa_oh)[:, None]
+    left = dense(params["left_embed"], aa_oh)
+    right = dense(params["right_embed"], aa_oh)
+    pair = left[:, :, None, :] + right[:, None, :, :]
+    rel = jnp.clip(
+        batch["residue_index"][:, :, None] - batch["residue_index"][:, None, :],
+        -RELPOS_K, RELPOS_K,
+    ) + RELPOS_K
+    pair = pair + dense(params["relpos_embed"],
+                        jax.nn.one_hot(rel, 2 * RELPOS_K + 1, dtype=dt))
+    return msa_rep, pair
+
+
+def embed_recycle(params, msa, pair, prev, cfg: AlphaFoldConfig):
+    """Add recycled features (Jumper et al. §1.10): LN'ed previous reps and a
+    binned distance embedding of the previous predicted CB/CA positions."""
+    prev_msa_row, prev_pair, prev_pos = prev
+    msa = msa.at[:, 0].add(
+        layer_norm(params["recycle"]["ln_m"], prev_msa_row).astype(msa.dtype)
+    )
+    pair = pair + layer_norm(params["recycle"]["ln_z"], prev_pair).astype(pair.dtype)
+    d = jnp.linalg.norm(
+        prev_pos[:, :, None] - prev_pos[:, None] + 1e-8, axis=-1
+    )
+    edges = jnp.linspace(3.375, 21.375, cfg.recycle_bins - 1)
+    bins = jnp.sum(d[..., None] > edges, axis=-1)
+    pair = pair + dense(
+        params["recycle"]["dist_embed"],
+        jax.nn.one_hot(bins, cfg.recycle_bins, dtype=pair.dtype),
+    )
+    return msa, pair
+
+
+def alphafold_iteration(params, batch, prev, cfg: AlphaFoldConfig, *,
+                        dist=LocalDist(), rng=None, train=False):
+    """One recycling iteration: embed -> Evoformer -> structure + heads.
+
+    Under DAP the caller passes already-sharded batch tensors and a dist
+    backend; embedding/heads/structure are element-wise or replicated-safe.
+    """
+    dt = cfg.compute_dtype
+    msa, pair = embed_inputs(params, batch, cfg)
+    msa, pair = embed_recycle(params, msa, pair, prev, cfg)
+    msa = msa.astype(dt)
+    pair = pair.astype(dt)
+
+    seq_mask = batch["seq_mask"]
+    pair_mask = seq_mask[:, :, None] * seq_mask[:, None, :]
+    msa, pair = evoformer_stack(
+        params["evoformer"], msa, pair, batch["msa_mask"], seq_mask, pair_mask,
+        dist=dist, cfg=cfg.evoformer, rng=rng, train=train,
+    )
+
+    single = dense(params["single_proj"], msa[:, 0].astype(jnp.float32))
+    coords, frames, traj = structure_module(
+        params["structure"], single, pair.astype(jnp.float32), seq_mask,
+        cfg.structure,
+    )
+    return {
+        "msa": msa,
+        "pair": pair,
+        "coords": coords,
+        "frames": frames,
+        "traj": traj,
+        "msa_logits": dense(params["msa_head"], msa.astype(jnp.float32)),
+        "distogram_logits": dense(params["dist_head"], pair.astype(jnp.float32)),
+    }
+
+
+def alphafold_forward(params, batch, cfg: AlphaFoldConfig, *,
+                      n_recycle: int | jax.Array | None = None,
+                      dist=LocalDist(), rng=None, train=False):
+    """Full forward with recycling. Pre-final iterations run under
+    stop_gradient (AlphaFold training recipe); the number of recycles can be a
+    traced scalar (sampled per-batch during training, fixed 3 at inference)."""
+    b, s, r = batch["msa"].shape
+    d_m, d_z = cfg.d_msa, cfg.d_pair
+    if n_recycle is None:
+        n_recycle = cfg.n_recycle
+    prev = (
+        jnp.zeros((b, r, d_m), jnp.float32),
+        jnp.zeros((b, r, r, d_z), jnp.float32),
+        jnp.zeros((b, r, 3), jnp.float32),
+    )
+
+    def body(i, prev):
+        out = alphafold_iteration(params, batch, prev, cfg, dist=dist,
+                                  rng=rng, train=train)
+        return (out["msa"][:, 0].astype(jnp.float32),
+                out["pair"].astype(jnp.float32), out["coords"])
+
+    prev = jax.lax.stop_gradient(
+        jax.lax.fori_loop(0, n_recycle, body, prev)
+    )
+    return alphafold_iteration(params, batch, prev, cfg, dist=dist, rng=rng,
+                               train=train)
+
+
+def alphafold_train_loss(params, batch, cfg: AlphaFoldConfig, rng=None,
+                         n_recycle=None, dist=LocalDist()):
+    out = alphafold_forward(params, batch, cfg, n_recycle=n_recycle, dist=dist,
+                            rng=rng, train=True)
+    return alphafold_loss(out, batch)

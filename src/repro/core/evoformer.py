@@ -1,0 +1,453 @@
+"""Evoformer (AlphaFold 2 trunk) with Dynamic Axial Parallelism.
+
+One implementation, three execution modes via the ``dist`` backend
+(core/dist.py). Sharding state machine (shard_map local view), following
+paper Fig. 6:
+
+  MSA rep   (B, s, r, Hm): sharded on **s** during row ops, swapped to **r**
+            by all_to_all for column attention + Outer-Product-Mean, swapped
+            back *after* OPM consumes it — the swap-back is launched before
+            the pair stack and consumed at the next block's row attention,
+            which is exactly the paper's Duality-Async overlap window.
+  pair rep  (B, i, j, Hz): sharded on **i**; "incoming"/"ending-node" ops run
+            on the all_to_all-transposed tensor (an axis swap, 1/N^2 volume).
+  AllGather materializes cross-axis operands: OPM right projection, triangular
+  left/right projections, and the (H, r, r) attention bias tensors.
+
+Kernel usage (paper §IV.A): all softmaxes go through the fused
+scale+bias+mask+softmax Pallas kernel; all LayerNorms through the fused LN
+kernel; gating through bias+sigmoid+mul; residual adds through
+bias+dropout+add. QKV and left/right projections use merged GEMMs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dist import LocalDist
+from repro.kernels import ops
+from repro.layers.attention import evoformer_attention, init_attention, AttnDims, \
+    project_qkv, output_proj
+from repro.layers.mlp import init_transition, transition
+from repro.layers.norms import init_layer_norm, layer_norm
+from repro.layers.params import Params, dense, init_dense
+
+NEG_INF = -1e9
+
+
+@dataclass(frozen=True)
+class EvoformerConfig:
+    d_msa: int = 256
+    d_pair: int = 128
+    msa_heads: int = 8
+    pair_heads: int = 4
+    head_dim: int = 32
+    opm_dim: int = 32
+    tri_mult_dim: int = 128
+    transition_factor: int = 4
+    dropout_msa: float = 0.15
+    dropout_pair: float = 0.25
+    n_blocks: int = 48
+    compute_dtype: Any = jnp.bfloat16
+    # remat policy for the block scan: "nothing" (recompute all, min memory)
+    # or "dots" (save GEMM outputs: less recompute, more activation memory).
+    remat_policy: str = "nothing"
+    # OPM j-chunking: compute the (i, j, 32, 32) outer-product intermediate
+    # in j-chunks of this size (0 = whole row at once). Shrinks the dominant
+    # (B, i/N, r, 1024) intermediate by r/chunk (§Perf alphafold iter 2).
+    opm_chunk: int = 0
+    # Inference "chunking technique" (paper §V.C): the single-device fallback
+    # AlphaFold/OpenFold use for long sequences — attention rows processed in
+    # sequential chunks, capping the (G, H, r, r) transient. 0 = off. The
+    # paper's point (Figs 12-13, Table V) is that DAP beats this; we implement
+    # both so the comparison is ours to measure.
+    inference_chunk: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_evoformer_block(key, cfg: EvoformerConfig) -> Params:
+    ks = iter(jax.random.split(key, 24))
+    d_m, d_z = cfg.d_msa, cfg.d_pair
+    hm, hz, hd = cfg.msa_heads, cfg.pair_heads, cfg.head_dim
+    c_mult = cfg.tri_mult_dim
+
+    def attn(d_in, heads, d_out):
+        return init_attention(
+            next(ks), d_in, heads, heads, hd, gating=True, out_bias=True,
+            d_out=d_out,
+        )
+
+    def tri_mult():
+        return {
+            "ln_in": init_layer_norm(d_z),
+            # Merge GEMM (paper §IV.A.1): left+right projections and
+            # left+right gates each fused into one weight.
+            "proj": init_dense(next(ks), d_z, 2 * c_mult, bias=True),
+            "gate": init_dense(next(ks), d_z, 2 * c_mult, bias=True),
+            "ln_out": init_layer_norm(c_mult),
+            "out": init_dense(next(ks), c_mult, d_z, bias=True, zero_init=True),
+            "gate_out": init_dense(next(ks), d_z, d_z, bias=True),
+        }
+
+    def tri_attn():
+        return {
+            "ln": init_layer_norm(d_z),
+            "bias": init_dense(next(ks), d_z, hz, bias=False),
+            "attn": attn(d_z, hz, d_z),
+        }
+
+    return {
+        "msa_row": {
+            "ln_m": init_layer_norm(d_m),
+            "ln_z": init_layer_norm(d_z),
+            "bias": init_dense(next(ks), d_z, hm, bias=False),
+            "attn": attn(d_m, hm, d_m),
+        },
+        "msa_col": {"ln": init_layer_norm(d_m), "attn": attn(d_m, hm, d_m)},
+        "msa_trans": {"ln": init_layer_norm(d_m),
+                      "mlp": init_transition(next(ks), d_m, cfg.transition_factor)},
+        "opm": {
+            "ln": init_layer_norm(d_m),
+            "proj": init_dense(next(ks), d_m, 2 * cfg.opm_dim, bias=True),
+            "out": init_dense(next(ks), cfg.opm_dim * cfg.opm_dim, d_z,
+                              bias=True, zero_init=True),
+        },
+        "tri_mult_out": tri_mult(),
+        "tri_mult_in": tri_mult(),
+        "tri_attn_start": tri_attn(),
+        "tri_attn_end": tri_attn(),
+        "pair_trans": {"ln": init_layer_norm(d_z),
+                       "mlp": init_transition(next(ks), d_z, cfg.transition_factor)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+def shared_dropout(x, rate: float, rng, shared_axis: int, train: bool):
+    """Dropout with the mask shared along one axis (AlphaFold row/col dropout).
+
+    Under shard_map the mask is shared within the local shard when the shared
+    axis is the sharded one (stochastic-regularization-equivalent; exact
+    equivalence across dist modes is tested with dropout disabled)."""
+    if not train or rate == 0.0 or rng is None:
+        return x
+    shape = list(x.shape)
+    shape[shared_axis] = 1
+    keep = jax.random.bernoulli(rng, 1.0 - rate, shape)
+    return jnp.where(keep, x / (1.0 - rate), 0.0).astype(x.dtype)
+
+
+def _gated_attention(p_attn, x_n, bias, key_mask, dims: AttnDims,
+                     dist=LocalDist(), chunk: int = 0):
+    """Group attention, kept 5D so (batch, group) dims never merge — merging
+    two mesh-sharded dims would force an all-gather under GSPMD.
+
+    x_n: (B, G, S, d); bias (B, H, S, S) shared across G, or None;
+    key_mask (B, G, S) in {0,1}, or None. The G (group) dim carries the DAP
+    shard; the scores/probs constraints below pin it through the backward
+    recompute regions, where plain propagation loses it.
+
+    chunk > 0: the paper-§V.C chunking technique — G processed in sequential
+    chunks, capping the scores transient at (B, chunk, H, S, S). Inference
+    fallback only (trades latency for memory; DAP is the scalable answer).
+    """
+    def attend(x_c, mask_c):
+        q, k, v = project_qkv(p_attn, x_c, dims, compute_dtype=x_c.dtype)
+        hd = q.shape[-1]
+        scores = jnp.einsum("bgihd,bgjhd->bghij", q, k)
+        scores = dist.constrain(scores, ("b", "m", None, None, None))
+        mask = None
+        if mask_c is not None:
+            mask = jnp.where(mask_c > 0, 0.0, NEG_INF).astype(jnp.float32)
+        probs = ops.fused_softmax(scores, bias=bias, mask=mask,
+                                  scale=1.0 / (hd**0.5))
+        probs = dist.constrain(probs, ("b", "m", None, None, None))
+        ctx = jnp.einsum("bghij,bgjhd->bgihd", probs, v)
+        return output_proj(p_attn, ctx, x_for_gate=x_c)
+
+    g = x_n.shape[1]
+    if not chunk or g % chunk != 0 or chunk >= g:
+        return attend(x_n, key_mask)
+    nc = g // chunk
+
+    def split(t):
+        return t.reshape(t.shape[0], nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    if key_mask is None:
+        out = jax.lax.map(lambda x: attend(x, None), split(x_n))
+    else:
+        out = jax.lax.map(lambda xm: attend(xm[0], xm[1]),
+                          (split(x_n), split(key_mask)))
+    return out.swapaxes(0, 1).reshape(x_n.shape[0], g, *out.shape[3:])
+
+
+# ---------------------------------------------------------------------------
+# Sub-modules (all take *local* tensors per the sharding state machine)
+# ---------------------------------------------------------------------------
+
+def msa_row_attention(p, msa, pair, seq_mask, dist, cfg: EvoformerConfig):
+    """msa (B, s/N, r, Hm) [s-shard]; pair (B, i/N, j, Hz) [i-shard];
+    seq_mask (B, r) replicated."""
+    b, s_loc, r, _ = msa.shape
+    dims = AttnDims(cfg.msa_heads, cfg.msa_heads, cfg.head_dim)
+    # Pair bias: project local pair rows -> (B, i/N, j, H) -> gather rows.
+    z_n = layer_norm(p["ln_z"], pair)
+    bias_loc = dense(p["bias"], z_n)                      # (B, i/N, j, H)
+    bias_loc = bias_loc.transpose(0, 3, 1, 2)             # (B, H, i/N, j)
+    bias = dist.all_gather(bias_loc, axis=2)              # (B, H, r, r)
+    bias = dist.constrain(bias, ("b", None, None, None))
+    # Duality-async window: the gather result is first consumed *after* the
+    # QKV projection below — independent compute the scheduler can overlap.
+    m_n = layer_norm(p["ln_m"], msa)
+    key_mask = jnp.broadcast_to(seq_mask[:, None, :], (b, s_loc, r))
+    return _gated_attention(p["attn"], m_n, bias, key_mask, dims,
+                            dist=dist, chunk=cfg.inference_chunk)
+
+
+def msa_col_attention(p, msa, msa_mask, dist, cfg: EvoformerConfig):
+    """msa (B, s, r/N, Hm) [r-shard]; msa_mask (B, s, r/N)."""
+    b, s, r_loc, _ = msa.shape
+    dims = AttnDims(cfg.msa_heads, cfg.msa_heads, cfg.head_dim)
+    m_n = layer_norm(p["ln"], msa)
+    x = m_n.transpose(0, 2, 1, 3)                  # (B, r/N, s, d)
+    key_mask = msa_mask.transpose(0, 2, 1)         # (B, r/N, s)
+    out = _gated_attention(p["attn"], x, None, key_mask, dims,
+                           dist=dist, chunk=cfg.inference_chunk)
+    return out.transpose(0, 2, 1, 3)
+
+
+def msa_transition(p, msa):
+    return transition(p["mlp"], layer_norm(p["ln"], msa))
+
+
+def outer_product_mean(p, msa, msa_mask, dist, cfg: EvoformerConfig):
+    """msa (B, s, r/N, Hm) [r-shard] -> pair update (B, i/N, j, Hz) [i-shard].
+
+    Paper Fig. 6(b): the cross-axis operand is AllGathered; we gather the
+    *right* projection so the output lands i-sharded, matching the pair rep.
+    """
+    c = cfg.opm_dim
+    m_n = layer_norm(p["ln"], msa)
+    ab = dense(p["proj"], m_n)                    # merged GEMM (B, s, r/N, 2c)
+    a, bproj = jnp.split(ab, 2, axis=-1)
+    mask = msa_mask[..., None].astype(a.dtype)
+    a = a * mask
+    bproj = bproj * mask
+    b_full = dist.all_gather(bproj, axis=2)       # (B, s, r, c)
+    b_full = dist.constrain(b_full, ("b", None, None, None))
+    mask_full = dist.all_gather(msa_mask, axis=2)  # (B, s, r)
+
+    def opm_block(b_blk, mask_blk):
+        o = jnp.einsum("bsic,bsjd->bijcd", a, b_blk)  # (B, r/N, jc, c, c)
+        norm = jnp.einsum("bsi,bsj->bij", msa_mask, mask_blk)
+        o = (o.astype(jnp.float32)
+             / (norm[..., None, None] + 1e-3)).astype(a.dtype)
+        o = o.reshape(o.shape[:3] + (c * c,))
+        return dense(p["out"], o)                  # (B, i/N, jc, Hz)
+
+    jc = cfg.opm_chunk
+    r_full = b_full.shape[2]
+    if not jc or r_full % jc != 0 or jc >= r_full:
+        return opm_block(b_full, mask_full)
+    # j-chunked: scan keeps the (i, jc, c*c) intermediate bounded.
+    nb = r_full // jc
+    bsz, s = b_full.shape[:2]
+    b_c = b_full.reshape(bsz, s, nb, jc, c).transpose(2, 0, 1, 3, 4)
+    m_c = mask_full.reshape(bsz, s, nb, jc).transpose(2, 0, 1, 3)
+    _, outs = jax.lax.scan(
+        lambda _, bm: (None, opm_block(bm[0], bm[1])), None, (b_c, m_c))
+    # outs: (nb, B, i/N, jc, Hz) -> (B, i/N, r, Hz)
+    return outs.transpose(1, 2, 0, 3, 4).reshape(bsz, a.shape[2], r_full, -1)
+
+
+def triangle_mult_core(p, z_in_proj_src, z_gate_src, pair_mask_loc, dist,
+                       cfg: EvoformerConfig, incoming_src=None):
+    """Shared core of the two Triangular Multiplicative Updates.
+
+    z_in_proj_src: tensor the a/b projections read (already LN'ed); for the
+    "outgoing" update this is LN(z) (i-shard); for "incoming" it is the
+    transposed LN(z) (also row-sharded, in transposed coords).
+    Returns the (i-shard) update *before* the output gate.
+    """
+    c = cfg.tri_mult_dim
+    ab = dense(p["proj"], z_in_proj_src)           # (B, p/N, k, 2c) merged
+    g = dense(p["gate"], z_in_proj_src)
+    ab = ab * jax.nn.sigmoid(g.astype(jnp.float32)).astype(ab.dtype)
+    ab = ab * pair_mask_loc[..., None].astype(ab.dtype)
+    a, bm = jnp.split(ab, 2, axis=-1)
+    b_full = dist.all_gather(bm, axis=1)           # (B, r, k, c) gather rows
+    b_full = dist.constrain(b_full, ("b", None, None, None))
+    o = jnp.einsum("bikc,bjkc->bijc", a, b_full)   # (B, p/N, r, c)
+    return dense(p["out"], layer_norm(p["ln_out"], o))
+
+
+def triangle_mult_outgoing(p, pair, pair_mask_loc, dist, cfg):
+    z_n = layer_norm(p["ln_in"], pair)
+    upd = triangle_mult_core(p, z_n, z_n, pair_mask_loc, dist, cfg)
+    # Fused gating kernel: sigmoid(z_n @ Wg + bg) * upd in one HBM pass.
+    g_lin = jnp.einsum("...d,de->...e", z_n,
+                       p["gate_out"]["w"].astype(z_n.dtype))
+    return ops.bias_sigmoid_mul(g_lin, p["gate_out"]["b"], upd)
+
+
+def triangle_mult_incoming(p, pair, pair_t, pair_mask_loc_t, dist, cfg):
+    """incoming(z)_ij = sum_k a_ki b_kj == outgoing_core(z^T)_ij.
+
+    pair:   (B, i/N, j, Hz) — residual/gate source (i-shard).
+    pair_t: (B, j/N, i, Hz) — transposed tensor (from all_to_all axis swap).
+    """
+    z_n = layer_norm(p["ln_in"], pair)
+    z_n_t = layer_norm(p["ln_in"], pair_t)
+    upd_t = triangle_mult_core(p, z_n_t, z_n_t, pair_mask_loc_t, dist, cfg)
+    # upd_t is o_out(z^T) sharded on z^T-rows; o_out(z^T)_pq = o_in(z)_pq and
+    # z^T-row shard p == z-col shard p... transpose back to i-shard coords.
+    upd = transpose_pair(upd_t, dist)
+    g_lin = jnp.einsum("...d,de->...e", z_n,
+                       p["gate_out"]["w"].astype(z_n.dtype))
+    return ops.bias_sigmoid_mul(g_lin, p["gate_out"]["b"], upd)
+
+
+def triangle_attention(p, pair, seq_mask, dist, cfg: EvoformerConfig):
+    """Around starting node on (B, i/N, j, Hz): per-row attention over k with
+    bias b(j,k); bias rows are local -> AllGather."""
+    b, i_loc, r, _ = pair.shape
+    dims = AttnDims(cfg.pair_heads, cfg.pair_heads, cfg.head_dim)
+    z_n = layer_norm(p["ln"], pair)
+    bias_loc = dense(p["bias"], z_n).transpose(0, 3, 1, 2)  # (B, H, i/N, k)
+    bias = dist.all_gather(bias_loc, axis=2)                # (B, H, r, r)
+    bias = dist.constrain(bias, ("b", None, None, None))
+    key_mask = jnp.broadcast_to(seq_mask[:, None, :], (b, i_loc, r))
+    return _gated_attention(p["attn"], z_n, bias, key_mask, dims,
+                            dist=dist, chunk=cfg.inference_chunk)
+
+
+def transpose_pair(x, dist):
+    """Axis-swap a pair-like tensor: (B, i/N, j, c) -> (B, j/N, i, c).
+
+    all_to_all moves the shard (1/N^2 volume, paper Table III), local swap
+    finishes the transpose."""
+    y = dist.all_to_all(x, split_axis=2, concat_axis=1)  # (B, i, j/N, c)
+    y = y.swapaxes(1, 2)
+    return dist.constrain(y, ("b", "m") + (None,) * (y.ndim - 2))
+
+
+# ---------------------------------------------------------------------------
+# Full block
+# ---------------------------------------------------------------------------
+
+def evoformer_block(
+    params: Params,
+    msa: jax.Array,        # (B, s/N, r, Hm)  s-shard
+    pair: jax.Array,       # (B, i/N, j, Hz)  i-shard
+    msa_mask: jax.Array,   # (B, s/N, r)
+    seq_mask: jax.Array,   # (B, r) replicated
+    pair_mask_loc: jax.Array,  # (B, i/N, j)
+    *,
+    dist=LocalDist(),
+    cfg: EvoformerConfig,
+    rng=None,
+    train: bool = False,
+):
+    """One Evoformer block under the DAP sharding state machine."""
+    rngs = list(jax.random.split(rng, 8)) if rng is not None else [None] * 8
+
+    # ----- MSA stack (s-shard phase) -----
+    msa = dist.constrain(msa, ("b", "m", None, None))
+    pair = dist.constrain(pair, ("b", "m", None, None))
+    upd = msa_row_attention(params["msa_row"], msa, pair, seq_mask, dist, cfg)
+    upd = shared_dropout(upd, cfg.dropout_msa, rngs[0], 2, train)
+    msa = msa + upd
+
+    # all_to_all #1: s-shard -> r-shard.
+    msa = dist.all_to_all(msa, split_axis=2, concat_axis=1)
+    msa = dist.constrain(msa, ("b", None, "m", None))
+    msa_mask_r = dist.all_to_all(msa_mask, split_axis=2, concat_axis=1)
+
+    msa = msa + msa_col_attention(params["msa_col"], msa, msa_mask_r,
+                                  dist, cfg)
+    msa = msa + msa_transition(params["msa_trans"], msa)
+
+    # ----- Communication: OPM consumes the r-shard MSA -----
+    pair_upd = outer_product_mean(params["opm"], msa, msa_mask_r, dist, cfg)
+
+    # all_to_all #2 (the Duality-Async window): swap MSA back to s-shard now;
+    # its result is consumed only at the *next block's* row attention, so the
+    # entire pair stack below is overlap-eligible compute.
+    msa = dist.all_to_all(msa, split_axis=1, concat_axis=2)
+    msa = dist.constrain(msa, ("b", "m", None, None))
+
+    pair = pair + shared_dropout(pair_upd, cfg.dropout_pair, rngs[1], 1, train)
+
+    # ----- Pair stack (i-shard phase) -----
+    upd = triangle_mult_outgoing(params["tri_mult_out"], pair, pair_mask_loc,
+                                 dist, cfg)
+    pair = pair + shared_dropout(upd, cfg.dropout_pair, rngs[2], 1, train)
+
+    pair_t = transpose_pair(pair, dist)
+    pair_mask_t = transpose_pair(pair_mask_loc[..., None], dist)[..., 0]
+    upd = triangle_mult_incoming(params["tri_mult_in"], pair, pair_t,
+                                 pair_mask_t, dist, cfg)
+    pair = pair + shared_dropout(upd, cfg.dropout_pair, rngs[3], 1, train)
+
+    upd = triangle_attention(params["tri_attn_start"], pair, seq_mask, dist, cfg)
+    pair = pair + shared_dropout(upd, cfg.dropout_pair, rngs[4], 1, train)
+
+    # Ending-node attention == starting-node attention on the transpose.
+    pair_t = transpose_pair(pair, dist)
+    upd_t = triangle_attention(params["tri_attn_end"], pair_t, seq_mask, dist, cfg)
+    upd = transpose_pair(upd_t, dist)
+    pair = pair + shared_dropout(upd, cfg.dropout_pair, rngs[5], 2, train)
+
+    pair = pair + transition(params["pair_trans"]["mlp"],
+                             layer_norm(params["pair_trans"]["ln"], pair))
+    return msa, pair
+
+
+def init_evoformer_stack(key, cfg: EvoformerConfig) -> Params:
+    """Stacked block params with leading layer axis (scan-compatible)."""
+    keys = jax.random.split(key, cfg.n_blocks)
+    return jax.vmap(lambda k: init_evoformer_block(k, cfg))(keys)
+
+
+def evoformer_stack(
+    params_stacked: Params,
+    msa: jax.Array,
+    pair: jax.Array,
+    msa_mask: jax.Array,
+    seq_mask: jax.Array,
+    pair_mask_loc: jax.Array,
+    *,
+    dist=LocalDist(),
+    cfg: EvoformerConfig,
+    rng=None,
+    train: bool = False,
+    remat: bool = True,
+):
+    """scan over n_blocks Evoformer blocks (activation checkpointing per block,
+    as AlphaFold/the paper do — §III.B "gradient checkpointing")."""
+    rngs = (jax.random.split(rng, cfg.n_blocks) if rng is not None
+            else jnp.zeros((cfg.n_blocks, 2), jnp.uint32))
+
+    def body(carry, xs):
+        m, z = carry
+        p, r_key = xs
+        r = r_key if rng is not None else None
+        m, z = evoformer_block(p, m, z, msa_mask, seq_mask, pair_mask_loc,
+                               dist=dist, cfg=cfg, rng=r, train=train)
+        return (m, z), None
+
+    if remat:
+        policy = (jax.checkpoint_policies.dots_saveable
+                  if cfg.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=policy)
+    (msa, pair), _ = jax.lax.scan(body, (msa, pair), (params_stacked, rngs))
+    return msa, pair

@@ -1,0 +1,6 @@
+from repro.data.synthetic import (  # noqa: F401
+    LMBatch,
+    ProteinBatch,
+    lm_batches,
+    protein_batches,
+)

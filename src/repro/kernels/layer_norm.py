@@ -1,0 +1,73 @@
+"""Fused LayerNorm Pallas TPU kernel (paper §IV.A.3, Fig. 9).
+
+GPU→TPU adaptation: the paper uses a warp per row with the *Welford* merge
+update so partial (mean, M2) streams held by different threads can be combined
+numerically stably in one pass. On TPU the whole row lives in one VMEM tile, so
+no cross-thread merging exists; we keep the one-pass property by accumulating
+``sum(x)`` and ``sum(x^2)`` in fp32 inside the tile. At the row lengths in this
+framework (<= ~27k, bf16 inputs) fp32 E[x^2]-E[x]^2 matches the two-pass oracle
+to within bf16 resolution — asserted by the kernel test sweep.
+
+Fusion (the actual win, as in the paper): load x once from HBM, write y once,
+with statistics + affine applied in-register.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 8
+LANE = 128
+
+
+def _pad_to(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def _layer_norm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float, c_actual: int):
+    x = x_ref[...].astype(jnp.float32)  # (ROW_TILE, C_pad)
+    if c_actual != x.shape[-1]:
+        lane = jax.lax.broadcasted_iota(jnp.int32, x.shape, x.ndim - 1)
+        valid = lane < c_actual
+        x = jnp.where(valid, x, 0.0)
+    count = jnp.float32(c_actual)
+    s1 = jnp.sum(x, axis=-1, keepdims=True)
+    s2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    mean = s1 / count
+    var = jnp.maximum(s2 / count - mean * mean, 0.0)
+    inv = jax.lax.rsqrt(var + eps)
+    y = (x - mean) * inv
+    y = y * g_ref[...].astype(jnp.float32)[0] + b_ref[...].astype(jnp.float32)[0]
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def layer_norm_pallas(
+    x: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    *,
+    eps: float = 1e-5,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (R, C) normalized over C; gamma/beta: (C,)."""
+    r, c = x.shape
+    c_pad = _pad_to(c, LANE)
+    row_tile = ROW_TILE if r >= ROW_TILE else r
+    grid = (pl.cdiv(r, row_tile),)
+    kernel = functools.partial(_layer_norm_kernel, eps=eps, c_actual=c)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_tile, c_pad), lambda i: (i, 0)),
+            pl.BlockSpec((1, c_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, c_pad), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_tile, c_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, gamma.reshape(1, c), beta.reshape(1, c))

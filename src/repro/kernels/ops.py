@@ -1,0 +1,285 @@
+"""Public, shape-polymorphic entry points for the Pallas kernels.
+
+Each op:
+  * reshapes arbitrary leading dims down to the kernel's canonical layout,
+  * runs the Pallas kernel forward (interpret=True automatically on CPU — TPU
+    is the *target*, CPU interpret mode is the validation vehicle),
+  * carries a ``jax.custom_vjp`` whose backward is the analytic gradient in
+    plain jnp (memory-bound element-wise math that XLA fuses; on TPU these
+    could be promoted to Pallas backward kernels — forward fusion is where
+    the paper's win is),
+  * falls back to the pure-jnp oracle (ref.py) when the shape is outside the
+    kernel envelope or kernels are globally disabled.
+
+Toggle: set REPRO_DISABLE_KERNELS=1 (or flip ``KERNELS_ENABLED``) to force
+oracle paths everywhere — used by A/B tests and by the production-mesh
+dry-run, where XLA fuses these patterns natively.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.fused_elementwise import (
+    bias_dropout_add_pallas,
+    bias_sigmoid_mul_pallas,
+)
+from repro.kernels.fused_softmax import fused_softmax_pallas
+from repro.kernels.layer_norm import layer_norm_pallas
+
+KERNELS_ENABLED = os.environ.get("REPRO_DISABLE_KERNELS", "0") != "1"
+
+# Kernel envelope: last-dim sizes beyond this would blow the VMEM tile budget
+# on the v5e target (ROW_TILE rows * C * 4 B fp32 + headroom in ~16 MB VMEM).
+_MAX_SOFTMAX_C = 16384
+_MAX_NORM_C = 32768
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# fused softmax
+# ---------------------------------------------------------------------------
+
+
+def _softmax_impl(scale, has_bias, has_mask, x, bias, mask):
+    n, h, r, c = x.shape
+    if not KERNELS_ENABLED or c > _MAX_SOFTMAX_C:
+        return ref.softmax_ref(x, bias if has_bias else None,
+                               mask if has_mask else None, scale)
+    return fused_softmax_pallas(
+        x, bias if has_bias else None, mask if has_mask else None,
+        scale=scale, has_bias=has_bias, has_mask=has_mask,
+        interpret=_interpret(),
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _softmax_op(scale, has_bias, has_mask, x, bias, mask):
+    return _softmax_impl(scale, has_bias, has_mask, x, bias, mask)
+
+
+def _softmax_fwd(scale, has_bias, has_mask, x, bias, mask):
+    y = _softmax_impl(scale, has_bias, has_mask, x, bias, mask)
+    return y, (y, None if bias is None else bias.shape,
+               None if mask is None else mask.shape)
+
+
+def _softmax_bwd(scale, has_bias, has_mask, res, g):
+    y, bias_shape, mask_shape = res
+    yf = y.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    dot = jnp.sum(gf * yf, axis=-1, keepdims=True)
+    dlogits = yf * (gf - dot)  # grad wrt (scale*x + bias + mask)
+    dx = (dlogits * scale).astype(y.dtype)
+    dbias = None
+    if has_bias:
+        b = bias_shape[0]
+        n = y.shape[0]
+        dbias = dlogits.reshape((b, n // b) + dlogits.shape[1:]).sum(axis=1)
+    dmask = None
+    if has_mask:
+        dmask = dlogits.sum(axis=(1, 2))
+    return dx, dbias, dmask
+
+
+_softmax_op.defvjp(_softmax_fwd, _softmax_bwd)
+
+
+def fused_softmax(
+    x: jax.Array,
+    bias: jax.Array | None = None,
+    mask: jax.Array | None = None,
+    scale: float = 1.0,
+) -> jax.Array:
+    """softmax(scale*x + bias + mask) over the last axis.
+
+    x: (..., H, R, C) — leading dims are flattened into N for the kernel.
+    bias: (H, R, C) or (B, H, R, C), N % B == 0 (each bias batch element is
+          shared by N/B consecutive rows), or None.
+    mask: additive, shape (..., C) matching x's leading dims, or None.
+
+    5D form (group attention, Evoformer): x (B, G, H, R, C) with bias
+    (B, H, R, C) shared across G and mask (B, G, C). When the Pallas path is
+    disabled (production dry-run), this form computes WITHOUT flattening —
+    reshaping (B, G) together would merge two mesh-sharded dims and force
+    GSPMD to all-gather the whole representation (§Perf alphafold iter 3).
+    """
+    if x.ndim == 5 and not (KERNELS_ENABLED and x.shape[-1] <= _MAX_SOFTMAX_C):
+        acc = x.astype(jnp.float32) * scale
+        if bias is not None:
+            acc = acc + bias.astype(jnp.float32)[:, None]
+        if mask is not None:
+            acc = acc + mask.astype(jnp.float32)[:, :, None, None, :]
+        return jax.nn.softmax(acc, axis=-1).astype(x.dtype)
+    if x.ndim == 5:
+        b, g, h, r, c = x.shape
+        xb = x.reshape((b * g, h, r, c))
+        mb = mask.reshape((-1, c)) if mask is not None else None
+        out = _softmax_op(scale, bias is not None, mask is not None, xb,
+                          bias, mb)
+        return out.reshape(x.shape)
+    *lead, h, r, c = x.shape
+    if bias is not None and bias.ndim == 3:
+        bias = bias[None]
+    xb = x.reshape((-1, h, r, c))
+    mb = mask.reshape((-1, c)) if mask is not None else None
+    out = _softmax_op(scale, bias is not None, mask is not None, xb, bias, mb)
+    return out.reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# layer norm
+# ---------------------------------------------------------------------------
+
+
+def _ln_impl(eps, x, gamma, beta):
+    c = x.shape[-1]
+    if not KERNELS_ENABLED or c > _MAX_NORM_C:
+        return ref.layer_norm_ref(x, gamma, beta, eps)
+    return layer_norm_pallas(x, gamma, beta, eps=eps, interpret=_interpret())
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _ln_op(eps, x, gamma, beta):
+    return _ln_impl(eps, x, gamma, beta)
+
+
+def _ln_fwd(eps, x, gamma, beta):
+    return _ln_impl(eps, x, gamma, beta), (x, gamma)
+
+
+def _ln_bwd(eps, res, g):
+    x, gamma = res
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    xhat = (xf - mean) * inv
+    dgamma = jnp.sum(gf * xhat, axis=0)
+    dbeta = jnp.sum(gf, axis=0)
+    gg = gf * gamma.astype(jnp.float32)
+    dx = inv * (
+        gg
+        - jnp.mean(gg, axis=-1, keepdims=True)
+        - xhat * jnp.mean(gg * xhat, axis=-1, keepdims=True)
+    )
+    return dx.astype(x.dtype), dgamma.astype(gamma.dtype), dbeta.astype(gamma.dtype)
+
+
+_ln_op.defvjp(_ln_fwd, _ln_bwd)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    """LayerNorm over the last axis; any leading shape."""
+    c = x.shape[-1]
+    xb = x.reshape((-1, c))
+    return _ln_op(eps, xb, gamma, beta).reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# bias + sigmoid + mul (gating)
+# ---------------------------------------------------------------------------
+
+
+def _bsm_impl(g, bg, v):
+    c = g.shape[-1]
+    if not KERNELS_ENABLED or c > _MAX_NORM_C:
+        return ref.bias_sigmoid_mul_ref(g, bg, v)
+    return bias_sigmoid_mul_pallas(g, bg, v, interpret=_interpret())
+
+
+@jax.custom_vjp
+def _bsm_op(g, bg, v):
+    return _bsm_impl(g, bg, v)
+
+
+def _bsm_fwd(g, bg, v):
+    return _bsm_impl(g, bg, v), (g, bg, v)
+
+
+def _bsm_bwd(res, grad):
+    g, bg, v = res
+    gradf = grad.astype(jnp.float32)
+    s = jax.nn.sigmoid(g.astype(jnp.float32) + bg.astype(jnp.float32))
+    dv = (gradf * s).astype(v.dtype)
+    dg_f = gradf * v.astype(jnp.float32) * s * (1.0 - s)
+    dg = dg_f.astype(g.dtype)
+    dbg = dg_f.sum(axis=0).astype(bg.dtype)
+    return dg, dbg, dv
+
+
+_bsm_op.defvjp(_bsm_fwd, _bsm_bwd)
+
+
+def bias_sigmoid_mul(g: jax.Array, bg: jax.Array, v: jax.Array) -> jax.Array:
+    """sigmoid(g + bg) * v; g and v share shape (..., C), bg is (C,)."""
+    c = g.shape[-1]
+    out = _bsm_op(g.reshape((-1, c)), bg, v.reshape((-1, c)))
+    return out.reshape(v.shape)
+
+
+# ---------------------------------------------------------------------------
+# bias + dropout + add (residual)
+# ---------------------------------------------------------------------------
+
+
+def _bda_impl(rate, x, b, residual, keep):
+    c = x.shape[-1]
+    if not KERNELS_ENABLED or c > _MAX_NORM_C:
+        return ref.bias_dropout_add_ref(x, b, residual,
+                                        keep if rate > 0.0 else None, rate)
+    return bias_dropout_add_pallas(x, b, residual, keep, rate=rate,
+                                   interpret=_interpret())
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _bda_op(rate, x, b, residual, keep):
+    return _bda_impl(rate, x, b, residual, keep)
+
+
+def _bda_fwd(rate, x, b, residual, keep):
+    return _bda_impl(rate, x, b, residual, keep), (keep,)
+
+
+def _bda_bwd(rate, res, g):
+    (keep,) = res
+    gf = g.astype(jnp.float32)
+    if rate > 0.0:
+        dx_f = gf * keep / (1.0 - rate)
+    else:
+        dx_f = gf
+    return (dx_f.astype(g.dtype), dx_f.sum(axis=0).astype(g.dtype), g,
+            jnp.zeros_like(keep))
+
+
+_bda_op.defvjp(_bda_fwd, _bda_bwd)
+
+
+def bias_dropout_add(
+    x: jax.Array,
+    b: jax.Array,
+    residual: jax.Array,
+    rate: float = 0.0,
+    rng: jax.Array | None = None,
+) -> jax.Array:
+    """residual + dropout(x + b, rate); rng=None or rate=0 disables dropout."""
+    c = x.shape[-1]
+    xb = x.reshape((-1, c))
+    rb = residual.reshape((-1, c))
+    if rng is not None and rate > 0.0:
+        keep = jax.random.bernoulli(rng, 1.0 - rate, xb.shape).astype(jnp.float32)
+        eff_rate = rate
+    else:
+        keep = jnp.ones_like(xb, dtype=jnp.float32)
+        eff_rate = 0.0
+    out = _bda_op(eff_rate, xb, b, rb, keep)
+    return out.reshape(residual.shape)

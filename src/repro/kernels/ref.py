@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references: each kernel test sweeps shapes/dtypes and
+asserts allclose against these functions. They are also the fallback path used
+by ops.py when a shape is outside the kernel's supported envelope.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_ref(
+    x: jax.Array,
+    bias: jax.Array | None = None,
+    mask: jax.Array | None = None,
+    scale: float = 1.0,
+) -> jax.Array:
+    """softmax(scale*x + bias + mask) over the last axis, fp32 accumulation.
+
+    x:    (N, H, R, C)
+    bias: (B, H, R, C) with N % B == 0 — each bias batch element is shared by
+          N/B consecutive rows of x (pair bias in Evoformer: B batch elements,
+          N = B*s attention groups). (H, R, C) is accepted as B=1.
+    mask: (N, C)     additive, broadcast over H, R
+    """
+    acc = x.astype(jnp.float32) * scale
+    if bias is not None:
+        if bias.ndim == 3:
+            bias = bias[None]
+        b = bias.shape[0]
+        n = x.shape[0]
+        acc = acc.reshape((b, n // b) + acc.shape[1:])
+        acc = acc + bias.astype(jnp.float32)[:, None]
+        acc = acc.reshape((n,) + acc.shape[2:])
+    if mask is not None:
+        acc = acc + mask.astype(jnp.float32)[:, None, None, :]
+    out = jax.nn.softmax(acc, axis=-1)
+    return out.astype(x.dtype)
+
+
+def layer_norm_ref(
+    x: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    eps: float = 1e-5,
+) -> jax.Array:
+    """LayerNorm over the last axis with affine, fp32 statistics."""
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def bias_sigmoid_mul_ref(g: jax.Array, bg: jax.Array, v: jax.Array) -> jax.Array:
+    """sigmoid(g + bg) * v — the Evoformer gating fusion (paper §IV.A JIT fusion)."""
+    gf = g.astype(jnp.float32) + bg.astype(jnp.float32)
+    return (jax.nn.sigmoid(gf) * v.astype(jnp.float32)).astype(v.dtype)
+
+
+def bias_dropout_add_ref(
+    x: jax.Array,
+    b: jax.Array,
+    residual: jax.Array,
+    keep: jax.Array | None,
+    rate: float,
+) -> jax.Array:
+    """residual + dropout(x + b, rate). `keep` is a float 0/1 mask (same shape
+    as x); keep=None => no dropout."""
+    y = x.astype(jnp.float32) + b.astype(jnp.float32)
+    if keep is not None and rate > 0.0:
+        y = y * keep.astype(jnp.float32) / (1.0 - rate)
+    return (residual.astype(jnp.float32) + y).astype(residual.dtype)

@@ -1,0 +1,1 @@
+from repro.layers import attention, mlp, norms, params, rotary  # noqa: F401

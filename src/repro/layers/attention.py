@@ -1,0 +1,438 @@
+"""Attention layers.
+
+Three execution strategies, chosen by the caller:
+
+* ``evoformer_attention`` — scores-materialized gated attention with the
+  paper's fused scale+bias+mask+softmax Pallas kernel. Evoformer rows are
+  short (N_r <= a few k), which is exactly the regime the paper's kernel
+  targets.
+* ``blockwise_attention`` — flash-style online-softmax attention (lax.scan
+  over q/kv blocks, fp32 running max/sum). Used for decoder-LM training and
+  32k prefill, where scores cannot be materialized.
+* ``sliding_window_attention`` — true sub-quadratic windowed attention: each
+  q block dynamic-slices only the KV window it can see, so compiled FLOPs
+  scale as O(S * W) not O(S^2) (gemma3 local layers, hymba, long-context).
+* ``decode_attention`` — single-token query against a (possibly sharded)
+  KV cache with length masking.
+
+All strategies implement GQA by broadcasting KV heads, support bf16 inputs
+with fp32 softmax statistics, and use a single merged QKV projection
+(paper §IV.A.1 "Merge GEMM").
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.layers.norms import init_rms_norm, rms_norm
+from repro.layers.params import Params, init_dense, trunc_normal
+
+NEG_INF = -1e9
+
+
+class AttnDims(NamedTuple):
+    n_heads: int
+    n_kv: int
+    head_dim: int
+
+
+def init_attention(
+    key,
+    d_model: int,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    *,
+    qkv_bias: bool = False,
+    out_bias: bool = False,
+    gating: bool = False,
+    qk_norm: bool = False,
+    d_out: int | None = None,
+    dtype=jnp.float32,
+) -> Params:
+    """Merged-QKV attention parameters (Merge GEMM, paper §IV.A.1)."""
+    d_out = d_out or d_model
+    ks = jax.random.split(key, 4)
+    qkv_dim = (n_heads + 2 * n_kv) * head_dim
+    p = {
+        "wqkv": init_dense(ks[0], d_model, qkv_dim, bias=qkv_bias, dtype=dtype),
+        "wo": init_dense(ks[1], n_heads * head_dim, d_out, bias=out_bias,
+                         zero_init=True, dtype=dtype),
+    }
+    if gating:
+        p["wg"] = init_dense(ks[2], d_model, n_heads * head_dim, bias=True, dtype=dtype)
+        # AlphaFold convention: gate bias init to 1 => gates start open.
+        p["wg"]["b"] = jnp.ones_like(p["wg"]["b"])
+    if qk_norm:
+        p["q_norm"] = init_rms_norm(head_dim, dtype)
+        p["k_norm"] = init_rms_norm(head_dim, dtype)
+    return p
+
+
+def project_qkv(
+    p: Params, x: jax.Array, dims: AttnDims, compute_dtype=jnp.bfloat16
+):
+    """x: (..., S, D) -> q (..., S, H, hd), k/v (..., S, KV, hd)."""
+    h, kv, hd = dims
+    y = jnp.einsum("...sd,de->...se", x.astype(compute_dtype),
+                   p["wqkv"]["w"].astype(compute_dtype))
+    if "b" in p["wqkv"]:
+        y = y + p["wqkv"]["b"].astype(compute_dtype)
+    q, k, v = jnp.split(y, [h * hd, (h + kv) * hd], axis=-1)
+    q = q.reshape(q.shape[:-1] + (h, hd))
+    k = k.reshape(k.shape[:-1] + (kv, hd))
+    v = v.reshape(v.shape[:-1] + (kv, hd))
+    if "q_norm" in p:
+        q = rms_norm(p["q_norm"], q)
+        k = rms_norm(p["k_norm"], k)
+    return q, k, v
+
+
+def output_proj(p: Params, ctx: jax.Array, x_for_gate: jax.Array | None = None):
+    """ctx: (..., S, H, hd) -> (..., S, d_out); optional sigmoid gating."""
+    dt = ctx.dtype
+    flat = ctx.reshape(ctx.shape[:-2] + (-1,))
+    if "wg" in p and x_for_gate is not None:
+        g = jnp.einsum("...sd,de->...se", x_for_gate.astype(dt),
+                       p["wg"]["w"].astype(dt))
+        flat = ops.bias_sigmoid_mul(g, p["wg"]["b"], flat)
+    out = jnp.einsum("...se,eo->...so", flat, p["wo"]["w"].astype(dt))
+    if "b" in p["wo"]:
+        out = out + p["wo"]["b"].astype(dt)
+    return out
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(..., S, KV, hd) -> (..., S, H, hd) by repeating groups."""
+    kv = k.shape[-2]
+    if kv == n_heads:
+        return k
+    reps = n_heads // kv
+    return jnp.repeat(k, reps, axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# Evoformer attention: scores materialized, fused softmax kernel.
+# ---------------------------------------------------------------------------
+
+def evoformer_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    bias: jax.Array | None = None,
+    mask: jax.Array | None = None,
+) -> jax.Array:
+    """q,k,v: (N, S, H, hd); bias: (B, H, Sq, Skv) pair bias with N % B == 0
+    (each bias batch element shared by N/B rows); mask: (N, Skv).
+
+    Returns (N, Sq, H, hd). Softmax via the paper's fused kernel.
+    """
+    hd = q.shape[-1]
+    scale = 1.0 / (hd**0.5)
+    scores = jnp.einsum("nqhd,nkhd->nhqk", q, k)  # bf16 MXU GEMM
+    probs = ops.fused_softmax(scores, bias=bias, mask=mask, scale=scale)
+    return jnp.einsum("nhqk,nkhd->nqhd", probs, v)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention for decoder LMs.
+#
+# custom_vjp: the forward saves only (q, k, v, out, lse); the backward
+# recomputes P per KV block. Without this, the scan's default VJP stores the
+# (B, H, q_block, kv_block) probability tensor for EVERY block iteration —
+# the dry-run showed those stacked f32 buffers dominating the memory roofline
+# term for all attention archs (EXPERIMENTS.md §Perf iteration 2).
+# ---------------------------------------------------------------------------
+
+
+def _flash_fwd_core(q, k, v, *, causal, q_offset, kv_block):
+    """q: (B, Sq, H, hd); k, v: (B, Skv, H, hd) (heads already expanded).
+    Returns out (B, Sq, H, hd_v) and lse (B, H, Sq), scanning KV blocks."""
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    hd_v = v.shape[-1]
+    kv_block = min(kv_block, skv)
+    assert skv % kv_block == 0
+    nkv = skv // kv_block
+    scale = 1.0 / (hd**0.5)
+    kb = k.reshape(b, nkv, kv_block, h, hd).swapaxes(0, 1)
+    vb = v.reshape(b, nkv, kv_block, h, hd_v).swapaxes(0, 1)
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, hd_v), jnp.float32)
+
+    def kv_step(carry, inp):
+        m, l, acc = carry
+        k_j, v_j, jk = inp
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k_j).astype(jnp.float32) * scale
+        if causal:
+            qpos = q_offset + jnp.arange(sq)
+            kpos = jk * kv_block + jnp.arange(kv_block)
+            s = jnp.where(qpos[:, None] >= kpos[None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(v_j.dtype), v_j).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                  (kb, vb, jnp.arange(nkv)))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None])
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    return out.swapaxes(1, 2).astype(q.dtype), lse  # (B, Sq, H, hd_v)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_attention(q, k, v, causal, q_offset, kv_block):
+    out, _ = _flash_fwd_core(q, k, v, causal=causal, q_offset=q_offset,
+                             kv_block=kv_block)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, q_offset, kv_block):
+    out, lse = _flash_fwd_core(q, k, v, causal=causal, q_offset=q_offset,
+                               kv_block=kv_block)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, q_offset, kv_block, res, g):
+    q, k, v, out, lse = res
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    hd_v = v.shape[-1]
+    kv_block = min(kv_block, skv)
+    nkv = skv // kv_block
+    scale = 1.0 / (hd**0.5)
+    kb = k.reshape(b, nkv, kv_block, h, hd).swapaxes(0, 1)
+    vb = v.reshape(b, nkv, kv_block, h, hd_v).swapaxes(0, 1)
+    gf = g.astype(jnp.float32)
+    # delta_i = sum_d dO_i . O_i  (B, H, Sq)
+    delta = jnp.einsum("bqhd,bqhd->bhq", gf, out.astype(jnp.float32))
+
+    def kv_step(dq, inp):
+        k_j, v_j, jk = inp
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k_j).astype(jnp.float32) * scale
+        if causal:
+            qpos = q_offset + jnp.arange(sq)
+            kpos = jk * kv_block + jnp.arange(kv_block)
+            s = jnp.where(qpos[:, None] >= kpos[None, :], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                  # (B, H, Sq, kvb)
+        dv_j = jnp.einsum("bhqk,bqhd->bkhd", p, gf)
+        dp = jnp.einsum("bqhd,bkhd->bhqk", gf,
+                        v_j.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * scale
+        dq = dq + jnp.einsum("bhqk,bkhd->bqhd", ds,
+                             k_j.astype(jnp.float32))
+        dk_j = jnp.einsum("bhqk,bqhd->bkhd", ds, q.astype(jnp.float32))
+        return dq, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((b, sq, h, hd), jnp.float32)
+    dq, (dk_b, dv_b) = jax.lax.scan(kv_step, dq0, (kb, vb, jnp.arange(nkv)))
+    dk = dk_b.swapaxes(0, 1).reshape(b, skv, h, hd)
+    dv = dv_b.swapaxes(0, 1).reshape(b, skv, h, hd_v)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def blockwise_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset: jax.Array | int = 0,
+    q_block: int = 512,
+    kv_block: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention. q: (B, Sq, H, hd); k,v: (B, Skv, KV, hd).
+
+    ``q_offset``: global position of q[0] relative to k[0] (sequence-parallel
+    shards pass their shard offset). fp32 accumulators; bf16 GEMMs.
+
+    The query axis is processed whole (q-blocking under a sharded sequence
+    axis only causes GSPMD resharding; ``q_block`` is kept for API compat and
+    ignored) and KV is scanned in ``kv_block`` chunks through the
+    flash-attention custom VJP above.
+    """
+    h = q.shape[2]
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    return _flash_attention(q, k, v, causal, int(q_offset), kv_block)
+
+
+def _swa_logits_mask(start, window, q_block, span):
+    qpos = start + jnp.arange(q_block)              # padded coords
+    kpos = start - window + jnp.arange(span)        # global kv coord
+    return ((kpos[None, :] <= qpos[:, None])
+            & (kpos[None, :] > qpos[:, None] - window - 1)
+            & (kpos[None, :] >= 0))
+
+
+def _swa_fwd_core(q, kp, vp, *, window, q_offset, q_block):
+    """q: (B, Sq, H, hd); kp/vp: left-padded (B, w+Skv, H, hd).
+    Returns out and lse (B, H, Sq)."""
+    b, sq, h, hd = q.shape
+    nq = sq // q_block
+    span = window + q_block
+    scale = 1.0 / (hd**0.5)
+    qb_ = q.reshape(b, nq, q_block, h, hd)
+
+    def q_step(_, qi):
+        q_i, iq = qi
+        start = q_offset + iq * q_block
+        k_i = jax.lax.dynamic_slice_in_dim(kp, start, span, axis=1)
+        v_i = jax.lax.dynamic_slice_in_dim(vp, start, span, axis=1)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q_i, k_i).astype(jnp.float32) * scale
+        s = jnp.where(_swa_logits_mask(start, window, q_block, span), s,
+                      NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        l = jnp.sum(p, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bhqd", p.astype(v_i.dtype), v_i)
+        out = out / l[..., None].astype(out.dtype)
+        lse = m[..., 0] + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (out.astype(q.dtype), lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None,
+                                   (qb_.swapaxes(0, 1), jnp.arange(nq)))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, sq, h, hd)
+    lse = lses.transpose(1, 2, 0, 3).reshape(b, h, sq)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _swa_attention(q, kp, vp, window, q_offset, q_block):
+    out, _ = _swa_fwd_core(q, kp, vp, window=window, q_offset=q_offset,
+                           q_block=q_block)
+    return out
+
+
+def _swa_fwd(q, kp, vp, window, q_offset, q_block):
+    out, lse = _swa_fwd_core(q, kp, vp, window=window, q_offset=q_offset,
+                             q_block=q_block)
+    return out, (q, kp, vp, out, lse)
+
+
+def _swa_bwd(window, q_offset, q_block, res, g):
+    """Flash-style backward for the windowed path: recompute P per q block;
+    dK/dV accumulate into the padded buffers with read-modify-write slices
+    (adjacent spans overlap by `window`)."""
+    q, kp, vp, out, lse = res
+    b, sq, h, hd = q.shape
+    nq = sq // q_block
+    span = window + q_block
+    scale = 1.0 / (hd**0.5)
+    gf = g.astype(jnp.float32)
+    delta = jnp.einsum("bqhd,bqhd->bhq", gf, out.astype(jnp.float32))
+    qb_ = q.reshape(b, nq, q_block, h, hd).swapaxes(0, 1)
+    gb_ = gf.reshape(b, nq, q_block, h, hd).swapaxes(0, 1)
+    lse_b = lse.reshape(b, h, nq, q_block).transpose(2, 0, 1, 3)
+    dl_b = delta.reshape(b, h, nq, q_block).transpose(2, 0, 1, 3)
+
+    dkp0 = jnp.zeros(kp.shape, jnp.float32)
+    dvp0 = jnp.zeros(vp.shape, jnp.float32)
+
+    def q_step(carry, inp):
+        dkp, dvp = carry
+        q_i, g_i, lse_i, dl_i, iq = inp
+        start = q_offset + iq * q_block
+        k_i = jax.lax.dynamic_slice_in_dim(kp, start, span, axis=1)
+        v_i = jax.lax.dynamic_slice_in_dim(vp, start, span, axis=1)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q_i, k_i).astype(jnp.float32) * scale
+        s = jnp.where(_swa_logits_mask(start, window, q_block, span), s,
+                      NEG_INF)
+        p = jnp.exp(s - lse_i[..., None])
+        dv_i = jnp.einsum("bhqk,bqhd->bkhd", p, g_i)
+        dp = jnp.einsum("bqhd,bkhd->bhqk", g_i, v_i.astype(jnp.float32))
+        ds = p * (dp - dl_i[..., None]) * scale
+        dq_i = jnp.einsum("bhqk,bkhd->bqhd", ds, k_i.astype(jnp.float32))
+        dk_i = jnp.einsum("bhqk,bqhd->bkhd", ds, q_i.astype(jnp.float32))
+        # read-modify-write the overlapping span
+        dkp = jax.lax.dynamic_update_slice_in_dim(
+            dkp, jax.lax.dynamic_slice_in_dim(dkp, start, span, 1) + dk_i,
+            start, axis=1)
+        dvp = jax.lax.dynamic_update_slice_in_dim(
+            dvp, jax.lax.dynamic_slice_in_dim(dvp, start, span, 1) + dv_i,
+            start, axis=1)
+        return (dkp, dvp), dq_i
+
+    (dkp, dvp), dq_b = jax.lax.scan(
+        q_step, (dkp0, dvp0), (qb_, gb_, lse_b, dl_b, jnp.arange(nq)))
+    dq = dq_b.swapaxes(0, 1).reshape(b, sq, h, hd)
+    return (dq.astype(q.dtype), dkp.astype(kp.dtype), dvp.astype(vp.dtype))
+
+
+_swa_attention.defvjp(_swa_fwd, _swa_bwd)
+
+
+def sliding_window_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int,
+    q_offset: jax.Array | int = 0,
+    q_block: int = 512,
+) -> jax.Array:
+    """Causal attention where each token sees at most `window` predecessors.
+
+    Sub-quadratic: q block i dynamic-slices KV rows
+    [i*qb + q_offset - window, i*qb + q_offset + qb) — compiled FLOPs are
+    O(Sq * (window + q_block)). Flash-style custom VJP: only (q, k, v, out,
+    lse) are saved across the remat boundary (no per-block P residuals).
+    """
+    b, sq, h, hd = q.shape
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    q_block = min(q_block, sq)
+    assert sq % q_block == 0
+    # Left-pad KV by `window` so every slice is in range; grads of the pad
+    # rows are discarded by the pad op's own VJP.
+    kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    return _swa_attention(q, kp, vp, window, int(q_offset), q_block)
+
+
+# ---------------------------------------------------------------------------
+# Decode-time attention (1 new token vs KV cache).
+# ---------------------------------------------------------------------------
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cache_len: jax.Array,
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    """q: (B, 1, H, hd); caches: (B, S, KV, hd); cache_len: (B,) valid lengths.
+
+    Full-cache dot product with length (and optional window) masking; fp32
+    softmax. Sequence-sharded caches compose with GSPMD partial softmax.
+    """
+    b, _, h, hd = q.shape
+    s = k_cache.shape[1]
+    k = _expand_kv(k_cache, h)
+    v = _expand_kv(v_cache, h)
+    scale = 1.0 / (hd**0.5)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    pos = jnp.arange(s)
+    valid = pos[None, :] < cache_len[:, None]  # (B, S)
+    if window is not None:
+        valid &= pos[None, :] >= (cache_len[:, None] - window)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    out = jnp.einsum("bhqk,bkhd->bhqd", p.astype(v.dtype), v)
+    out = out / jnp.sum(p, axis=-1)[..., None].astype(out.dtype)
+    return out.swapaxes(1, 2).astype(q.dtype)  # (B, 1, H, hd)

@@ -1,0 +1,55 @@
+"""Feed-forward blocks: SwiGLU (LLM) and Transition (Evoformer 2-layer MLP)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.params import Params, init_dense, dense
+
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        # Merge-GEMM: gate and up projections fused into one weight.
+        "wi": init_dense(k1, d_model, 2 * d_ff, bias=False, dtype=dtype),
+        "wo": init_dense(k2, d_ff, d_model, bias=False, zero_init=True, dtype=dtype),
+    }
+
+
+def swiglu(p: Params, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    gu = jnp.einsum("...d,de->...e", x, p["wi"]["w"].astype(dt))
+    g, u = jnp.split(gu, 2, axis=-1)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+    return jnp.einsum("...e,eo->...o", h, p["wo"]["w"].astype(dt))
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int, *, bias: bool = True,
+                  dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": init_dense(k1, d_model, d_ff, bias=bias, dtype=dtype),
+        "wo": init_dense(k2, d_ff, d_model, bias=bias, zero_init=True, dtype=dtype),
+    }
+
+
+def gelu_mlp(p: Params, x: jax.Array) -> jax.Array:
+    h = dense(p["wi"], x)
+    h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
+    return dense(p["wo"], h)
+
+
+# Evoformer "Transition": LN -> Linear(4x) -> ReLU -> Linear. The LN lives in
+# the caller; AlphaFold uses ReLU here.
+def init_transition(key, d: int, factor: int = 4, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": init_dense(k1, d, factor * d, bias=True, dtype=dtype),
+        "wo": init_dense(k2, factor * d, d, bias=True, zero_init=True, dtype=dtype),
+    }
+
+
+def transition(p: Params, x: jax.Array) -> jax.Array:
+    h = dense(p["wi"], x)
+    h = jax.nn.relu(h)
+    return dense(p["wo"], h)

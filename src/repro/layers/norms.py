@@ -1,0 +1,26 @@
+"""Normalization layers backed by the fused Pallas kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.layers.params import Params
+
+
+def init_layer_norm(d: int, dtype=jnp.float32) -> Params:
+    return {"gamma": jnp.ones((d,), dtype), "beta": jnp.zeros((d,), dtype)}
+
+
+def layer_norm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    return ops.layer_norm(x, p["gamma"], p["beta"], eps)
+
+
+def init_rms_norm(d: int, dtype=jnp.float32) -> Params:
+    return {"gamma": jnp.ones((d,), dtype)}
+
+
+def rms_norm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * inv * p["gamma"].astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,25 @@
+"""Rotary position embeddings (interleaved-half convention, LLaMA-style)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    assert head_dim % 2 == 0
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponents)  # (head_dim/2,)
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float = 10000.0
+) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,536 @@
+"""Generic decoder LM covering all assigned architectures.
+
+A model is a sequence of *stages* ``(kind, count)``; layers within a stage are
+identical, their params stacked on a leading axis and executed with
+``lax.scan`` (small HLO even for 62-layer models — what makes the 512-device
+dry-run compile fast). Kind grammar: ``<mixer>[+<ffn>]``:
+
+  mixers: attn (full causal), swa (sliding window), mla (DeepSeek latent),
+          mlstm / slstm (xLSTM), hymba / hymba_full (parallel attn+SSM heads)
+  ffns:   dense (SwiGLU or GELU per cfg.act), moe, none
+  default ffn: dense if d_ff > 0 else none (mlstm/slstm carry their own MLPs).
+
+Three modes share one code path per layer: train (causal, no cache),
+prefill (causal + cache out), decode (one token against the cache).
+Sliding-window layers keep *rolling* (window-sized) caches, so a 500k-token
+gemma3 decode state stores 1024 entries for each local layer.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.attention import (
+    AttnDims,
+    blockwise_attention,
+    decode_attention,
+    project_qkv,
+    sliding_window_attention,
+)
+from repro.layers.mlp import gelu_mlp, init_gelu_mlp, init_swiglu, swiglu
+from repro.layers.norms import (
+    init_layer_norm,
+    init_rms_norm,
+    layer_norm,
+    rms_norm,
+)
+from repro.layers.params import Params, dense, init_dense, init_embedding, embed
+from repro.layers.attention import init_attention
+from repro.layers.rotary import apply_rope
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+
+
+def _parse_kind(kind: str, cfg: ModelConfig):
+    mixer, _, ffn = kind.partition("+")
+    if not ffn:
+        ffn = "dense" if cfg.d_ff > 0 else "none"
+    return mixer, ffn
+
+
+def _init_norm(cfg: ModelConfig, d: int):
+    return init_rms_norm(d) if cfg.norm == "rmsnorm" else init_layer_norm(d)
+
+
+def _norm(cfg: ModelConfig, p, x):
+    return rms_norm(p, x) if cfg.norm == "rmsnorm" else layer_norm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# layer init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, kind: str) -> Params:
+    mixer, ffn = _parse_kind(kind, cfg)
+    ks = iter(jax.random.split(key, 8))
+    d = cfg.d_model
+    p: Params = {"ln1": _init_norm(cfg, d)}
+
+    if mixer in ("attn", "swa"):
+        p["attn"] = init_attention(
+            next(ks), d, cfg.n_heads, cfg.n_kv, cfg.resolved_head_dim,
+            qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm,
+        )
+    elif mixer == "mla":
+        p["attn"] = mla_mod.init_mla(next(ks), d, cfg.n_heads, cfg.mla)
+    elif mixer == "mlstm":
+        p["mlstm"] = xlstm_mod.init_mlstm(next(ks), d, cfg.n_heads)
+    elif mixer == "slstm":
+        p["slstm"] = xlstm_mod.init_slstm(next(ks), d, cfg.n_heads)
+    elif mixer in ("hymba", "hymba_full"):
+        p["attn"] = init_attention(
+            next(ks), d, cfg.n_heads, cfg.n_kv, cfg.resolved_head_dim,
+            qkv_bias=cfg.qkv_bias,
+        )
+        p["mamba"] = ssm_mod.init_mamba(next(ks), d, cfg.ssm)
+        p["norm_attn"] = init_rms_norm(d)
+        p["norm_ssm"] = init_rms_norm(d)
+    else:
+        raise ValueError(f"unknown mixer {mixer!r}")
+
+    if ffn == "dense":
+        p["ln2"] = _init_norm(cfg, d)
+        d_ff = cfg.moe.d_ff_dense if (cfg.moe and cfg.moe.d_ff_dense) else cfg.d_ff
+        if cfg.act == "swiglu":
+            p["ffn"] = init_swiglu(next(ks), d, d_ff)
+        else:
+            p["ffn"] = init_gelu_mlp(next(ks), d, d_ff)
+    elif ffn == "moe":
+        p["ln2"] = _init_norm(cfg, d)
+        p["moe"] = moe_mod.init_moe(next(ks), d, cfg.moe)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# layer apply
+# ---------------------------------------------------------------------------
+
+def _maybe_gather_kv(k, v, cfg: ModelConfig):
+    """DAP KV-gather (paper Fig. 6 style): materialize KV replicated over the
+    'model' axis ONCE per layer, so the blockwise scan below never re-gathers.
+    No-op outside a mesh context (single-device tests)."""
+    if not cfg.gather_kv:
+        return k, v
+    am = jax.sharding.get_abstract_mesh()
+    if am is None or getattr(am, "empty", True):
+        return k, v
+    from jax.sharding import PartitionSpec as P
+    rep = P(*([None] * k.ndim))
+    return (jax.lax.with_sharding_constraint(k, rep),
+            jax.lax.with_sharding_constraint(v, rep))
+
+
+def _attn_full(p, x_n, cfg: ModelConfig, positions):
+    dims = AttnDims(cfg.n_heads, cfg.n_kv, cfg.resolved_head_dim)
+    q, k, v = project_qkv(p, x_n, dims, compute_dtype=x_n.dtype)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    kg, vg = _maybe_gather_kv(k, v, cfg)
+    qb = cfg.attn_q_block or q.shape[1]
+    ctx = blockwise_attention(q, kg, vg, causal=True, q_block=qb,
+                              kv_block=cfg.attn_kv_block)
+    return ctx, (k, v)
+
+
+def _attn_swa(p, x_n, cfg: ModelConfig, positions):
+    dims = AttnDims(cfg.n_heads, cfg.n_kv, cfg.resolved_head_dim)
+    q, k, v = project_qkv(p, x_n, dims, compute_dtype=x_n.dtype)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    w = cfg.sliding_window
+    kg, vg = _maybe_gather_kv(k, v, cfg)
+    # SWA keeps small q blocks (its sub-quadratic slicing needs them); 0 keeps
+    # the default rather than full-length.
+    qb = cfg.attn_q_block or 512
+    ctx = sliding_window_attention(q, kg, vg, window=w,
+                                   q_block=min(qb, q.shape[1]))
+    return ctx, (k, v)
+
+
+def _out_proj(p, ctx):
+    flat = ctx.reshape(ctx.shape[:-2] + (-1,))
+    return jnp.einsum("...e,eo->...o", flat, p["wo"]["w"].astype(flat.dtype))
+
+
+def _swa_cache_from_prefill(k, v, window):
+    """Store the last `window` KV rows at their rolling slots."""
+    s = k.shape[1]
+    w = min(window, s)
+    j = jnp.arange(window)
+    # slot j holds position p_j = last p < s with p % window == j
+    p_j = s - 1 - ((s - 1 - j) % window)
+    valid = p_j >= 0
+    p_j = jnp.clip(p_j, 0, s - 1)
+    kc = jnp.take(k, p_j, axis=1) * valid[None, :, None, None].astype(k.dtype)
+    vc = jnp.take(v, p_j, axis=1) * valid[None, :, None, None].astype(v.dtype)
+    return kc, vc
+
+
+def _swa_decode_attn(q, k_cache, v_cache, lengths, window):
+    """Rolling-cache decode attention: slot j holds position
+    L - ((L - j) mod W) where L = current position."""
+    w = k_cache.shape[1]
+    j = jnp.arange(w)[None, :]
+    L = lengths[:, None]
+    p_j = L - ((L - j) % w)
+    valid = (p_j >= 0) & (p_j >= L - window + 1) | (j == (L % w))
+    # decode_attention masks by `cache_len`; here we inline the same math with
+    # the rolling validity mask instead.
+    from repro.layers.attention import _expand_kv, NEG_INF
+    h = q.shape[2]
+    k = _expand_kv(k_cache, h)
+    v = _expand_kv(v_cache, h)
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    pr = jnp.exp(logits - m)
+    out = jnp.einsum("bhqk,bkhd->bhqd", pr.astype(v.dtype), v)
+    out = out / jnp.sum(pr, axis=-1)[..., None].astype(out.dtype)
+    return out.swapaxes(1, 2).astype(q.dtype)
+
+
+def _quantize_kv(x):
+    """Per-(token, kv-head) symmetric int8: x (B, S, KV, hd) ->
+    (int8 values, bf16 scales (B, S, KV, 1))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def _dequantize_kv(q, scale, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def _scatter_one(cache, new, slots):
+    def upd(c, n, l):
+        return jax.lax.dynamic_update_slice_in_dim(c, n, l, axis=0)
+    return jax.vmap(upd)(cache, new.astype(cache.dtype), slots)
+
+
+def _scatter_kv(cache_k, cache_v, k_new, v_new, slots):
+    return (_scatter_one(cache_k, k_new, slots),
+            _scatter_one(cache_v, v_new, slots))
+
+
+def _pad_cache_seq(tree, max_len: int | None):
+    """Pad prefill caches (axis 1 = sequence) out to the decode horizon."""
+    if max_len is None:
+        return tree
+
+    def pad(x):
+        if x.ndim >= 2 and x.shape[1] < max_len:
+            cfgpad = [(0, 0)] * x.ndim
+            cfgpad[1] = (0, max_len - x.shape[1])
+            return jnp.pad(x, cfgpad)
+        return x
+
+    return jax.tree.map(pad, tree)
+
+
+def apply_layer(p: Params, x, cfg: ModelConfig, kind: str, *, mode: str,
+                cache=None, lengths=None, pos_offset: int = 0,
+                max_cache_len: int | None = None):
+    """Returns (x_out, new_cache, aux). x: (B, S, d) or (B, 1, d) for decode."""
+    mixer, ffn = _parse_kind(kind, cfg)
+    b, s, d = x.shape
+    x_n = _norm(cfg, p["ln1"], x)
+    positions = (jnp.arange(s) + pos_offset)[None, :] if mode != "decode" \
+        else lengths[:, None]
+    new_cache = cache
+    aux = jnp.zeros((), jnp.float32)
+
+    if mixer in ("attn", "swa"):
+        if mode in ("train", "prefill"):
+            fn = _attn_full if mixer == "attn" else _attn_swa
+            ctx, (k, v) = fn(p["attn"], x_n, cfg, positions)
+            if mode == "prefill":
+                if mixer == "swa":
+                    kc, vc = _swa_cache_from_prefill(k, v, cfg.sliding_window)
+                    new_cache = {"k": kc, "v": vc}
+                elif cfg.kv_cache_int8:
+                    kq, ks = _quantize_kv(k)
+                    vq, vs = _quantize_kv(v)
+                    new_cache = _pad_cache_seq(
+                        {"k": kq, "k_s": ks, "v": vq, "v_s": vs},
+                        max_cache_len)
+                else:
+                    new_cache = _pad_cache_seq({"k": k, "v": v},
+                                               max_cache_len)
+        else:
+            dims = AttnDims(cfg.n_heads, cfg.n_kv, cfg.resolved_head_dim)
+            q, k, v = project_qkv(p["attn"], x_n, dims, compute_dtype=x_n.dtype)
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            if mixer == "swa":
+                w = cfg.sliding_window
+                slots = lengths % cache["k"].shape[1]
+                ck, cv = _scatter_kv(cache["k"], cache["v"], k, v, slots)
+                ctx = _swa_decode_attn(q, ck, cv, lengths, w)
+                new_cache = {"k": ck, "v": cv}
+            elif cfg.kv_cache_int8:
+                kq, ks = _quantize_kv(k)
+                vq, vs = _quantize_kv(v)
+                ck = _scatter_one(cache["k"], kq, lengths)
+                cks = _scatter_one(cache["k_s"], ks, lengths)
+                cv = _scatter_one(cache["v"], vq, lengths)
+                cvs = _scatter_one(cache["v_s"], vs, lengths)
+                ctx = decode_attention(q, _dequantize_kv(ck, cks),
+                                       _dequantize_kv(cv, cvs), lengths + 1)
+                new_cache = {"k": ck, "k_s": cks, "v": cv, "v_s": cvs}
+            else:
+                ck, cv = _scatter_kv(cache["k"], cache["v"], k, v, lengths)
+                ctx = decode_attention(q, ck, cv, lengths + 1)
+                new_cache = {"k": ck, "v": cv}
+        y = _out_proj(p["attn"], ctx)
+        x = x + y
+
+    elif mixer == "mla":
+        if mode in ("train", "prefill"):
+            y, kv = mla_mod.mla_attention_train(
+                p["attn"], x_n, cfg.n_heads, cfg.mla, positions=positions,
+                theta=cfg.rope_theta, q_block=cfg.attn_q_block,
+                kv_block=cfg.attn_kv_block,
+                gather_kv_fn=(lambda kk, vv: _maybe_gather_kv(kk, vv, cfg))
+                if cfg.gather_kv else None)
+            if mode == "prefill":
+                new_cache = _pad_cache_seq(kv, max_cache_len)
+        else:
+            y, new_cache = mla_mod.mla_attention_decode(
+                p["attn"], x_n, cache, lengths, cfg.n_heads, cfg.mla,
+                theta=cfg.rope_theta)
+        x = x + y
+
+    elif mixer == "mlstm":
+        if mode in ("train", "prefill"):
+            y, st = xlstm_mod.mlstm_forward(p["mlstm"], x_n, cfg.n_heads)
+            new_cache = st if mode == "prefill" else None
+        else:
+            y, new_cache = xlstm_mod.mlstm_decode(p["mlstm"], x_n, cache,
+                                                  cfg.n_heads)
+        x = x + y
+
+    elif mixer == "slstm":
+        if mode in ("train", "prefill"):
+            y, st = xlstm_mod.slstm_forward(p["slstm"], x_n)
+            new_cache = st if mode == "prefill" else None
+        else:
+            y, new_cache = xlstm_mod.slstm_decode(p["slstm"], x_n, cache)
+        x = x + y
+
+    elif mixer in ("hymba", "hymba_full"):
+        window = cfg.sliding_window if mixer == "hymba" else 0
+        if mode in ("train", "prefill"):
+            dims = AttnDims(cfg.n_heads, cfg.n_kv, cfg.resolved_head_dim)
+            q, k, v = project_qkv(p["attn"], x_n, dims, compute_dtype=x_n.dtype)
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            kg, vg = _maybe_gather_kv(k, v, cfg)
+            qb = cfg.attn_q_block or s
+            if window:
+                ctx = sliding_window_attention(
+                    q, kg, vg, window=window,
+                    q_block=min(cfg.attn_q_block or 512, s))
+            else:
+                ctx = blockwise_attention(q, kg, vg, causal=True, q_block=qb,
+                                          kv_block=cfg.attn_kv_block)
+            attn_y = _out_proj(p["attn"], ctx)
+            ssm_y, ssm_st = ssm_mod.mamba_forward(p["mamba"], x_n, cfg.ssm)
+            if mode == "prefill":
+                if window:
+                    kc, vc = _swa_cache_from_prefill(k, v, window)
+                else:
+                    padded = _pad_cache_seq({"k": k, "v": v}, max_cache_len)
+                    kc, vc = padded["k"], padded["v"]
+                new_cache = {"attn": {"k": kc, "v": vc}, "ssm": ssm_st}
+        else:
+            dims = AttnDims(cfg.n_heads, cfg.n_kv, cfg.resolved_head_dim)
+            q, k, v = project_qkv(p["attn"], x_n, dims, compute_dtype=x_n.dtype)
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            ca = cache["attn"]
+            if window:
+                slots = lengths % ca["k"].shape[1]
+                ck, cv = _scatter_kv(ca["k"], ca["v"], k, v, slots)
+                ctx = _swa_decode_attn(q, ck, cv, lengths, window)
+            else:
+                ck, cv = _scatter_kv(ca["k"], ca["v"], k, v, lengths)
+                ctx = decode_attention(q, ck, cv, lengths + 1)
+            attn_y = _out_proj(p["attn"], ctx)
+            ssm_y, ssm_st = ssm_mod.mamba_decode(p["mamba"], x_n, cache["ssm"],
+                                                 cfg.ssm)
+            new_cache = {"attn": {"k": ck, "v": cv}, "ssm": ssm_st}
+        # Hymba fusion: mean of per-branch normalized outputs.
+        y = 0.5 * (rms_norm(p["norm_attn"], attn_y) +
+                   rms_norm(p["norm_ssm"], ssm_y))
+        x = x + y
+
+    # --- FFN ---
+    if ffn == "dense":
+        h = _norm(cfg, p["ln2"], x)
+        h = swiglu(p["ffn"], h) if cfg.act == "swiglu" else gelu_mlp(p["ffn"], h)
+        x = x + h
+    elif ffn == "moe":
+        h = _norm(cfg, p["ln2"], x)
+        h, aux = moe_mod.moe_ffn(p["moe"], h, cfg.moe)
+        x = x + h
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# model: init / cache / forward / loss
+# ---------------------------------------------------------------------------
+
+def init_model(key, cfg: ModelConfig) -> Params:
+    ks = iter(jax.random.split(key, 4 + len(cfg.resolved_stages)))
+    params: Params = {
+        "embed": init_embedding(next(ks), cfg.vocab, cfg.d_model),
+        "final_norm": _init_norm(cfg, cfg.d_model),
+        "stages": [],
+    }
+    for kind, count in cfg.resolved_stages:
+        layer_keys = jax.random.split(next(ks), count)
+        params["stages"].append(
+            jax.vmap(lambda k, kind=kind: init_layer(k, cfg, kind))(layer_keys)
+        )
+    if not cfg.tie_embeddings:
+        params["head"] = init_dense(next(ks), cfg.d_model, cfg.vocab,
+                                    bias=False)
+    return params
+
+
+def _layer_cache_shape(cfg: ModelConfig, kind: str, batch: int, max_seq: int,
+                       dtype):
+    mixer, _ = _parse_kind(kind, cfg)
+    kv, hd = cfg.n_kv, cfg.resolved_head_dim
+    d_in = cfg.ssm.expand * cfg.d_model if cfg.ssm else 0
+
+    def kv_cache(seq):
+        return {"k": jnp.zeros((batch, seq, kv, hd), dtype),
+                "v": jnp.zeros((batch, seq, kv, hd), dtype)}
+
+    def kv_cache_int8(seq):
+        return {"k": jnp.zeros((batch, seq, kv, hd), jnp.int8),
+                "k_s": jnp.zeros((batch, seq, kv, 1), jnp.bfloat16),
+                "v": jnp.zeros((batch, seq, kv, hd), jnp.int8),
+                "v_s": jnp.zeros((batch, seq, kv, 1), jnp.bfloat16)}
+
+    if mixer == "attn":
+        return kv_cache_int8(max_seq) if cfg.kv_cache_int8 \
+            else kv_cache(max_seq)
+    if mixer == "swa":
+        return kv_cache(min(cfg.sliding_window, max_seq))
+    if mixer == "mla":
+        return mla_mod.init_mla_cache(batch, max_seq, cfg.mla, dtype)
+    if mixer == "mlstm":
+        return xlstm_mod.init_mlstm_state(batch, 2 * cfg.d_model, cfg.n_heads)
+    if mixer == "slstm":
+        return xlstm_mod.init_slstm_state(batch, cfg.d_model)
+    if mixer == "hymba":
+        return {"attn": kv_cache(min(cfg.sliding_window, max_seq)),
+                "ssm": ssm_mod.init_mamba_state(batch, d_in, cfg.ssm)}
+    if mixer == "hymba_full":
+        return {"attn": kv_cache(max_seq),
+                "ssm": ssm_mod.init_mamba_state(batch, d_in, cfg.ssm)}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16):
+    """Stacked per-stage caches: stage i -> pytree with leading `count` axis."""
+    caches = []
+    for kind, count in cfg.resolved_stages:
+        one = _layer_cache_shape(cfg, kind, batch, max_seq, dtype)
+        caches.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (count,) + x.shape), one))
+    return caches
+
+
+def model_forward(params: Params, tokens, cfg: ModelConfig, *,
+                  mode: str = "train", cache=None, lengths=None,
+                  prefix_embeds=None, remat: bool = True,
+                  max_cache_len: int | None = None,
+                  shard_x=None,
+                  compute_dtype=jnp.bfloat16):
+    """tokens: (B, S_text) int32 (S_text=1 for decode). prefix_embeds:
+    (B, P, d) for VLM/audio stubs (train/prefill only). `shard_x` is an
+    optional residual-stream constrainer (with_sharding_constraint under the
+    production mesh: the DAP sequence sharding is pinned after every layer).
+    Returns dict with logits, cache (prefill/decode), aux (MoE loss)."""
+    shard_x = shard_x or (lambda x: x)
+    x = embed(params["embed"], tokens, compute_dtype)
+    if cfg.modality and prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(compute_dtype), x], axis=1)
+    if cfg.family == "dense" and cfg.norm == "rmsnorm" and cfg.qk_norm:
+        # gemma convention: scale embeddings by sqrt(d_model)
+        x = x * jnp.sqrt(float(cfg.d_model)).astype(x.dtype)
+    x = shard_x(x)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    pos_offset = 0
+    for si, (kind, count) in enumerate(cfg.resolved_stages):
+        p_stage = params["stages"][si]
+        if mode == "train":
+            def body(xc, p, kind=kind):
+                y, _, aux = apply_layer(p, xc, cfg, kind, mode="train")
+                return shard_x(y), aux
+            if remat:
+                body = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.nothing_saveable,
+                    static_argnums=())
+            x, auxs = jax.lax.scan(body, x, p_stage)
+            aux_total = aux_total + jnp.sum(auxs)
+        elif mode == "prefill":
+            def body(xc, p, kind=kind):
+                y, c, aux = apply_layer(p, xc, cfg, kind, mode="prefill",
+                                        max_cache_len=max_cache_len)
+                return shard_x(y), (c, aux)
+            x, (stage_cache, auxs) = jax.lax.scan(body, x, p_stage)
+            new_caches.append(stage_cache)
+            aux_total = aux_total + jnp.sum(auxs)
+        else:  # decode
+            def body(xc, pc, kind=kind):
+                p, c = pc
+                y, c2, _ = apply_layer(p, xc, cfg, kind, mode="decode",
+                                       cache=c, lengths=lengths)
+                return y, c2
+            x, stage_cache = jax.lax.scan(body, x, (p_stage, cache[si]))
+            new_caches.append(stage_cache)
+
+    x = _norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embed"]["table"].astype(x.dtype))
+    else:
+        logits = dense(params["head"], x)
+    return {
+        "logits": logits,
+        "cache": new_caches if mode != "train" else None,
+        "aux": aux_total,
+    }
+
+
+def lm_loss(params: Params, batch: dict, cfg: ModelConfig, shard_x=None):
+    """batch: tokens (B,S), targets (B,S), mask (B,S), optional prefix_embeds.
+    Loss is computed on text positions only (prefix positions are dropped)."""
+    out = model_forward(params, batch["tokens"], cfg, mode="train",
+                        prefix_embeds=batch.get("prefix_embeds"),
+                        shard_x=shard_x)
+    logits = out["logits"]
+    n_text = batch["tokens"].shape[1]
+    logits = logits[:, -n_text:]  # drop prefix positions (VLM/audio)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, batch["targets"][..., None], axis=-1)[..., 0]
+    mask = batch["mask"]
+    ce = -jnp.sum(ll * mask) / (jnp.sum(mask) + 1e-6)
+    loss = ce + out["aux"]
+    return loss, {"loss": loss, "ce": ce, "aux": out["aux"],
+                  "ppl": jnp.exp(jnp.minimum(ce, 20.0))}
+

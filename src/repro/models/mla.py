@@ -1,0 +1,127 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV are compressed into a small latent c_kv (kv_lora=512) + a single shared
+RoPE key (rope_dim=64). Training/prefill materialize per-head K/V from the
+latent; decode uses the *absorbed* form (W_uk folded into the query, W_uv
+applied after attention), so the per-token cache is kv_lora+rope_dim floats —
+the property that makes MLA the best DAP-gather showcase among the assigned
+architectures (the gathered KV operand is ~20x smaller than GQA's).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig
+from repro.layers.norms import init_rms_norm, rms_norm
+from repro.layers.params import Params, init_dense, dense
+from repro.layers.rotary import apply_rope
+
+NEG_INF = -1e9
+
+
+def init_mla(key, d_model: int, n_heads: int, mla: MLAConfig) -> Params:
+    ks = iter(jax.random.split(key, 8))
+    qd = mla.nope_dim + mla.rope_dim
+    return {
+        "q_down": init_dense(next(ks), d_model, mla.q_lora, bias=False),
+        "q_norm": init_rms_norm(mla.q_lora),
+        "q_up": init_dense(next(ks), mla.q_lora, n_heads * qd, bias=False),
+        "kv_down": init_dense(next(ks), d_model, mla.kv_lora + mla.rope_dim,
+                              bias=False),
+        "kv_norm": init_rms_norm(mla.kv_lora),
+        "kv_up": init_dense(next(ks), mla.kv_lora,
+                            n_heads * (mla.nope_dim + mla.v_dim), bias=False),
+        "out": init_dense(next(ks), n_heads * mla.v_dim, d_model, bias=False,
+                          zero_init=True),
+    }
+
+
+def _project_q(p, x, n_heads, mla, positions, theta):
+    b, s, _ = x.shape
+    q = dense(p["q_up"], rms_norm(p["q_norm"], dense(p["q_down"], x)))
+    q = q.reshape(b, s, n_heads, mla.nope_dim + mla.rope_dim)
+    q_nope, q_rope = jnp.split(q, [mla.nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, theta)
+    return q_nope, q_rope
+
+
+def _compress_kv(p, x, mla, positions, theta):
+    ckv = dense(p["kv_down"], x)
+    c_kv, k_rope = jnp.split(ckv, [mla.kv_lora], axis=-1)
+    c_kv = rms_norm(p["kv_norm"], c_kv)                 # (B, S, kv_lora)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, theta)[:, :, 0]
+    return c_kv, k_rope                                  # (B, S, rope_dim)
+
+
+def mla_attention_train(p, x, n_heads, mla: MLAConfig, *, positions,
+                        theta: float = 10000.0, q_block: int = 512,
+                        kv_block: int = 1024, gather_kv_fn=None):
+    """Materialized form for train/prefill; causal; returns (out, cache)."""
+    b, s, _ = x.shape
+    q_nope, q_rope = _project_q(p, x, n_heads, mla, positions, theta)
+    c_kv, k_rope = _compress_kv(p, x, mla, positions, theta)
+    kv = dense(p["kv_up"], c_kv).reshape(b, s, n_heads, mla.nope_dim + mla.v_dim)
+    k_nope, v = jnp.split(kv, [mla.nope_dim], axis=-1)
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, s, n_heads, mla.rope_dim))], axis=-1
+    )
+    if gather_kv_fn is not None:
+        k, v = gather_kv_fn(k, v)
+    from repro.layers.attention import blockwise_attention
+    ctx = blockwise_attention(q, k, v, causal=True, q_block=q_block or s,
+                              kv_block=kv_block)
+    out = dense(p["out"], ctx.reshape(b, s, -1))
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_attention_decode(p, x, cache, cache_len, n_heads, mla: MLAConfig, *,
+                         theta: float = 10000.0):
+    """Absorbed-form decode: attention runs in latent space; cache is
+    (c_kv (B, S, kv_lora), k_rope (B, S, rope_dim))."""
+    b, _, d = x.shape
+    pos = cache_len[:, None]                       # (B, 1)
+    q_nope, q_rope = _project_q(p, x, n_heads, mla, pos, theta)
+
+    # write this token's compressed KV
+    c_new, kr_new = _compress_kv(p, x, mla, pos, theta)
+    c_kv = _scatter_cache(cache["c_kv"], c_new, cache_len)
+    k_rope = _scatter_cache(cache["k_rope"], kr_new, cache_len)
+
+    # absorb W_uk into q: q_lat (B, 1, H, kv_lora)
+    w_uk = p["kv_up"]["w"].reshape(mla.kv_lora, n_heads, mla.nope_dim + mla.v_dim)
+    w_k = w_uk[:, :, : mla.nope_dim]               # (kv_lora, H, nope)
+    w_v = w_uk[:, :, mla.nope_dim:]                # (kv_lora, H, v)
+    q_lat = jnp.einsum("bqhn,lhn->bqhl", q_nope, w_k.astype(q_nope.dtype))
+
+    scale = 1.0 / jnp.sqrt(float(mla.nope_dim + mla.rope_dim))
+    logits = (
+        jnp.einsum("bqhl,bsl->bhqs", q_lat, c_kv.astype(q_lat.dtype))
+        + jnp.einsum("bqhr,bsr->bhqs", q_rope, k_rope.astype(q_rope.dtype))
+    ).astype(jnp.float32) * scale
+    valid = jnp.arange(c_kv.shape[1])[None, :] <= cache_len[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx_lat = jnp.einsum("bhqs,bsl->bqhl", probs.astype(c_kv.dtype), c_kv)
+    ctx = jnp.einsum("bqhl,lhv->bqhv", ctx_lat, w_v.astype(ctx_lat.dtype))
+    out = dense(p["out"], ctx.reshape(b, 1, -1))
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def _scatter_cache(cache, new, lengths):
+    """cache (B, S, ...), new (B, 1, ...): write new at per-batch position.
+    vmapped dynamic_update_slice lowers to a 1-slot scatter (no full-cache
+    rewrite — the decode roofline reads the cache once, writes one slot)."""
+    def upd(c, n, l):
+        return jax.lax.dynamic_update_slice_in_dim(c, n, l, axis=0)
+    return jax.vmap(upd)(cache, new.astype(cache.dtype), lengths)
+
+
+def init_mla_cache(batch: int, seq: int, mla: MLAConfig, dtype=jnp.bfloat16):
+    return {
+        "c_kv": jnp.zeros((batch, seq, mla.kv_lora), dtype),
+        "k_rope": jnp.zeros((batch, seq, mla.rope_dim), dtype),
+    }

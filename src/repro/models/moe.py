@@ -1,0 +1,103 @@
+"""Mixture-of-Experts FFN (DeepSeek-MoE style: shared + fine-grained routed
+experts, top-k softmax routing with capacity-bounded dispatch).
+
+Dispatch strategy (TPU/GSPMD-friendly): token-choice top-k masking followed by
+per-expert top-C token selection — a static-shape, sort-based formulation that
+shards cleanly with experts on the `model` mesh axis (the all_to_all the paper
+uses for DAP axis swaps is the same collective XLA inserts here for expert
+dispatch). FLOPs scale with capacity (= k/E * cap_factor), not with E.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.layers.mlp import init_swiglu, swiglu
+from repro.layers.params import Params, trunc_normal
+
+
+def init_moe(key, d_model: int, moe: MoEConfig) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    f = moe.d_ff_expert
+    p: Params = {
+        "router": {"w": trunc_normal(k1, (d_model, moe.n_experts), 1.0)},
+        "experts": {
+            "wi": trunc_normal(k2, (moe.n_experts, d_model, 2 * f), 1.0),
+            "wo": jnp.zeros((moe.n_experts, f, d_model), jnp.float32),
+        },
+    }
+    if moe.n_shared:
+        p["shared"] = init_swiglu(k3, d_model, moe.n_shared * f)
+    return p
+
+
+def _capacity(n_tokens: int, moe: MoEConfig) -> int:
+    c = int(moe.capacity_factor * n_tokens * moe.top_k / moe.n_experts)
+    return min(n_tokens, max(8, (c + 7) // 8 * 8))
+
+
+def moe_ffn(p: Params, x: jax.Array, moe: MoEConfig):
+    """x: (B, S, d) -> (y (B, S, d), aux_loss scalar)."""
+    b, s, d = x.shape
+    n = b * s
+    xf = x.reshape(n, d)
+    dt = x.dtype
+
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32),
+                        p["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (N, E)
+    top_p, top_i = jax.lax.top_k(probs, moe.top_k)             # (N, k)
+    top_p = top_p / (jnp.sum(top_p, axis=-1, keepdims=True) + 1e-9)
+    # gate matrix: renormalized prob if expert chosen else 0
+    gate_full = jnp.zeros_like(probs).at[
+        jnp.arange(n)[:, None], top_i
+    ].set(top_p)                                               # (N, E)
+
+    # Per-expert top-C token selection (capacity-bounded, order-independent),
+    # performed independently inside each of G token groups so the routing
+    # metadata (scores, top_k sort) never crosses shards: with G = DAP degree,
+    # group-local selection is shard-local and the (E, G, C/G, d) -> (E, C, d)
+    # regroup is the expert-parallel all_to_all.
+    g_groups = moe.n_groups if n % moe.n_groups == 0 else 1
+    ng = n // g_groups
+    cap_g = _capacity(ng, moe)
+    cap = g_groups * cap_g
+    scores = jnp.where(gate_full > 0, probs, -1.0)             # (N, E)
+    scores_g = scores.reshape(g_groups, ng, moe.n_experts).transpose(0, 2, 1)
+    _, tok_g = jax.lax.top_k(scores_g, cap_g)                  # (G, E, Cg)
+    gate_g = gate_full.reshape(g_groups, ng, moe.n_experts).transpose(0, 2, 1)
+    ge = jnp.take_along_axis(gate_g, tok_g, axis=2)            # (G, E, Cg)
+    xg = xf.reshape(g_groups, ng, d)
+    xe = jax.vmap(lambda xv, iv: jnp.take(xv, iv.reshape(-1), axis=0))(
+        xg, tok_g
+    ).reshape(g_groups, moe.n_experts, cap_g, d)               # (G, E, Cg, d)
+    # regroup to expert-major (E, C, d): the EP all_to_all boundary.
+    xe = xe.transpose(1, 0, 2, 3).reshape(moe.n_experts, cap, d)
+    ge_e = ge.transpose(1, 0, 2).reshape(moe.n_experts, cap)
+
+    # Expert GEMMs (batched over E; shardable on the expert axis).
+    gu = jnp.einsum("ecd,edf->ecf", xe.astype(dt),
+                    p["experts"]["wi"].astype(dt))
+    g, u = jnp.split(gu, 2, axis=-1)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+    ye = jnp.einsum("ecf,efd->ecd", h, p["experts"]["wo"].astype(dt))
+    ye = ye * ge_e[..., None].astype(dt)
+
+    # return path: back to group-major, scatter-add into each group's tokens.
+    ye_g = ye.reshape(moe.n_experts, g_groups, cap_g, d).transpose(1, 0, 2, 3)
+    y = jax.vmap(
+        lambda acc_tokens, idx, vals: jnp.zeros((ng, d), dt).at[
+            idx.reshape(-1)
+        ].add(vals.reshape(-1, d))
+    )(xg, tok_g, ye_g).reshape(n, d)
+
+    # Shared experts (always active).
+    if "shared" in p:
+        y = y + swiglu(p["shared"], xf.astype(dt)).reshape(n, d)
+
+    # Load-balance auxiliary loss (Switch/DeepSeek form).
+    frac = jnp.mean((gate_full > 0).astype(jnp.float32), axis=0)   # (E,)
+    mean_p = jnp.mean(probs, axis=0)
+    aux = moe.aux_weight * moe.n_experts * jnp.sum(frac * mean_p)
+    return y.reshape(b, s, d), aux

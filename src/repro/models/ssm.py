@@ -1,0 +1,110 @@
+"""Selective state-space (Mamba-style) block, used by the Hymba hybrid arch.
+
+Training/prefill run the recurrence as a jax.lax.associative_scan over time
+(the TPU-native adaptation of Mamba's CUDA selective-scan kernel: the
+recurrence h_t = a_t * h_{t-1} + b_t is a first-order linear scan, which the
+associative combinator parallelizes in O(log S) depth — this is also the DAP
+story for recurrent archs: chunked sequence shards hand the carry across
+devices). Decode is the O(1)-state recurrent step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.layers.params import Params, init_dense, dense, trunc_normal
+
+
+def init_mamba(key, d_model: int, ssm: SSMConfig, d_inner: int | None = None) -> Params:
+    d_inner = d_inner or ssm.expand * d_model
+    dt_rank = ssm.dt_rank or max(1, d_model // 16)
+    ks = iter(jax.random.split(key, 8))
+    return {
+        "in_proj": init_dense(next(ks), d_model, 2 * d_inner, bias=False),
+        "conv_w": trunc_normal(next(ks), (ssm.conv_width, d_inner), 1.0),
+        "conv_b": jnp.zeros((d_inner,), jnp.float32),
+        "x_proj": init_dense(next(ks), d_inner, dt_rank + 2 * ssm.state_dim,
+                             bias=False),
+        "dt_proj": init_dense(next(ks), dt_rank, d_inner, bias=True),
+        # A initialized to -[1..state] (S4D-real), stored as log.
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ssm.state_dim + 1, dtype=jnp.float32),
+            (d_inner, ssm.state_dim))),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": init_dense(next(ks), d_inner, d_model, bias=False,
+                               zero_init=True),
+    }
+
+
+def _ssm_params(p, x_in, ssm: SSMConfig):
+    """x_in: (B, S, d_inner) post-conv. Returns discretized a, bx, C, D."""
+    dt_rank = p["dt_proj"]["w"].shape[0]
+    proj = dense(p["x_proj"], x_in)
+    dt, B, C = jnp.split(proj, [dt_rank, dt_rank + ssm.state_dim], axis=-1)
+    dt = jax.nn.softplus(dense(p["dt_proj"], dt).astype(jnp.float32))  # (B,S,di)
+    A = -jnp.exp(p["A_log"])                                  # (di, n)
+    a = jnp.exp(dt[..., None] * A)                            # (B,S,di,n)
+    bx = (dt * x_in.astype(jnp.float32))[..., None] * B[:, :, None, :].astype(jnp.float32)
+    return a, bx, C.astype(jnp.float32), p["D"]
+
+
+def _conv1d(p, x, ssm: SSMConfig, conv_state=None):
+    """Causal depthwise conv; x (B, S, di). Returns (y, new_conv_state)."""
+    w = p["conv_w"].astype(x.dtype)                           # (W, di)
+    kw = ssm.conv_width
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], kw - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                    # (B, S+W-1, di)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(kw))
+    y = y + p["conv_b"].astype(x.dtype)
+    new_state = xp[:, -(kw - 1):]
+    return y, new_state
+
+
+def mamba_forward(p: Params, x: jax.Array, ssm: SSMConfig):
+    """Full-sequence forward (train/prefill). x: (B, S, d). Returns
+    (y (B, S, d), state) where state = {"h": (B, di, n), "conv": ...}."""
+    xz = dense(p["in_proj"], x)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c, conv_state = _conv1d(p, x_in, ssm)
+    x_c = jax.nn.silu(x_c.astype(jnp.float32)).astype(x.dtype)
+    a, bx, C, D = _ssm_params(p, x_c, ssm)
+
+    # associative first-order scan over time: h_t = a_t h_{t-1} + bx_t
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    a_s, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", h, C)                      # (B, S, di)
+    y = y + D * x_c.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = dense(p["out_proj"], y.astype(x.dtype))
+    state = {"h": h[:, -1], "conv": conv_state}
+    return out, state
+
+
+def mamba_decode(p: Params, x: jax.Array, state, ssm: SSMConfig):
+    """Single-step decode. x: (B, 1, d); state h (B, di, n)."""
+    xz = dense(p["in_proj"], x)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c, conv_state = _conv1d(p, x_in, ssm, conv_state=state["conv"])
+    x_c = jax.nn.silu(x_c.astype(jnp.float32)).astype(x.dtype)
+    a, bx, C, D = _ssm_params(p, x_c, ssm)
+    h = a[:, 0] * state["h"] + bx[:, 0]                        # (B, di, n)
+    y = jnp.einsum("bdn,bn->bd", h, C[:, 0])[:, None]
+    y = y + D * x_c.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = dense(p["out_proj"], y.astype(x.dtype))
+    return out, {"h": h, "conv": conv_state}
+
+
+def init_mamba_state(batch: int, d_inner: int, ssm: SSMConfig):
+    return {
+        "h": jnp.zeros((batch, d_inner, ssm.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, ssm.conv_width - 1, d_inner), jnp.float32),
+    }

@@ -1,0 +1,222 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): mLSTM (matrix memory,
+parallelizable) and sLSTM (scalar memory, inherently recurrent).
+
+mLSTM is run in its parallel (quadratic-within-chunk, linear-across-chunks)
+formulation for train/prefill and as an O(1)-state recurrence for decode.
+sLSTM has recurrent (hidden-to-gate) connections, so train/prefill also scan
+— that sequential dependence is exactly why the paper's all_to_all axis-swap
+DAP does not apply to this family (DESIGN.md §Arch-applicability); sequence
+parallelism here means chunked scans with carry hand-off.
+
+Both blocks use exponential gating with the max-state stabilizer m_t.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.norms import init_rms_norm, rms_norm
+from repro.layers.params import Params, init_dense, dense
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, d_model: int, n_heads: int, expand: int = 2) -> Params:
+    di = expand * d_model
+    ks = iter(jax.random.split(key, 8))
+    return {
+        "up": init_dense(next(ks), d_model, 2 * di, bias=False),
+        "qkv": init_dense(next(ks), di, 3 * di, bias=False),
+        "gates": init_dense(next(ks), di, 2 * n_heads, bias=True),
+        "norm": init_rms_norm(di),
+        "down": init_dense(next(ks), di, d_model, bias=False, zero_init=True),
+        "_di": jnp.zeros((0, di)),  # records di for shape inference
+    }
+
+
+def _mlstm_gates(p, x_in, n_heads):
+    gi = dense(p["gates"], x_in).astype(jnp.float32)
+    log_i, log_f = jnp.split(gi, 2, axis=-1)          # (B, S, H) each
+    log_f = -jax.nn.softplus(-log_f)                  # log sigmoid(f)
+    return log_i, log_f
+
+
+def mlstm_forward(p: Params, x: jax.Array, n_heads: int, *, chunk: int = 256,
+                  state=None):
+    """Chunkwise-parallel mLSTM (train/prefill). x: (B, S, d).
+
+    TPU adaptation: within a chunk the gated linear attention runs as dense
+    MXU GEMMs (the parallel form); across chunks the (C, n, m) state is
+    carried by a lax.scan — O(S * chunk) memory instead of O(S^2), O(S/chunk)
+    sequential depth. This is the mLSTM analogue of the paper's "adapt the
+    blocking to the memory hierarchy" kernel story.
+    """
+    b, s, _ = x.shape
+    up = dense(p["up"], x)
+    x_in, z = jnp.split(up, 2, axis=-1)
+    di = x_in.shape[-1]
+    hd = di // n_heads
+    qkv = dense(p["qkv"], x_in)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, n_heads, hd).astype(jnp.float32)
+    k = k.reshape(b, s, n_heads, hd).astype(jnp.float32) / jnp.sqrt(float(hd))
+    v = v.reshape(b, s, n_heads, hd).astype(jnp.float32)
+    log_i, log_f = _mlstm_gates(p, x_in, n_heads)     # (B, S, H)
+
+    L = min(chunk, s)
+    assert s % L == 0, "sequence length must be a multiple of the chunk size"
+    nc = s // L
+
+    def split_chunks(t):  # (B, S, ...) -> (nc, B, L, ...)
+        return t.reshape(b, nc, L, *t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = split_chunks(q), split_chunks(k), split_chunks(v)
+    ic, fc = split_chunks(log_i), split_chunks(log_f)
+
+    if state is None:
+        state = init_mlstm_state(b, di, n_heads)
+
+    def chunk_step(carry, inp):
+        C_p, n_p, m_p = carry["C"], carry["n"], carry["m"]
+        q_i, k_i, v_i, li, lf = inp                   # (B, L, H, hd)/(B, L, H)
+        bcf = jnp.cumsum(lf, axis=1)                  # inclusive cumsum (B,L,H)
+        # intra-chunk decay matrix: t >= j: b_t - b_j + i_j
+        log_d = bcf[:, :, None] - bcf[:, None, :] + li[:, None, :, :]
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        log_d = jnp.where(causal[None, :, :, None], log_d, -jnp.inf)
+        intra_max = jnp.max(log_d, axis=2)            # (B, L, H)
+        # inter-chunk stabilizer: b_t + m_prev
+        inter = bcf + m_p[:, None, :]
+        m_t = jnp.maximum(intra_max, inter)           # (B, L, H)
+        d_mat = jnp.exp(log_d - m_t[:, :, None])
+        scores = jnp.einsum("bihd,bjhd->bijh", q_i, k_i)
+        w = scores * d_mat
+        inter_w = jnp.exp(inter - m_t)                # (B, L, H)
+        h_intra = jnp.einsum("bijh,bjhd->bihd", w, v_i)
+        h_inter = jnp.einsum("bihd,bhde->bihe", q_i, C_p) * inter_w[..., None]
+        # normalizer: n_t = sum_j D_tj k_j + inter_w_t * n_prev; den = |n_t.q_t|
+        n_vec = jnp.einsum("bijh,bjhd->bihd", d_mat, k_i)
+        n_vec = n_vec + inter_w[..., None] * n_p[:, None, :, :]
+        den = jnp.abs(jnp.einsum("bihd,bihd->bih", n_vec, q_i))
+        den = jnp.maximum(den, jnp.exp(-m_t)) + 1e-6
+        h = (h_intra + h_inter) / den[..., None]      # (B, L, H, hd)
+
+        # end-of-chunk state
+        b_L = bcf[:, -1:, :]                          # (B, 1, H)
+        m_new = jnp.maximum(b_L[:, 0] + m_p, jnp.max(b_L - bcf + li, axis=1))
+        w_end = jnp.exp(b_L - bcf + li - m_new[:, None, :])   # (B, L, H)
+        C_new = (jnp.exp(b_L[:, 0] + m_p - m_new)[..., None, None] * C_p
+                 + jnp.einsum("bjh,bjhd,bjhe->bhde", w_end, k_i, v_i))
+        n_new = (jnp.exp(b_L[:, 0] + m_p - m_new)[..., None] * n_p
+                 + jnp.einsum("bjh,bjhd->bhd", w_end, k_i))
+        return {"C": C_new, "n": n_new, "m": m_new}, h
+
+    state, hs = jax.lax.scan(chunk_step, state, (qc, kc, vc, ic, fc))
+    h = hs.swapaxes(0, 1).reshape(b, s, di)           # (B, S, di)
+    out = rms_norm(p["norm"], h.astype(x.dtype))
+    out = out * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = dense(p["down"], out)
+    return out, state
+
+
+def mlstm_decode(p: Params, x: jax.Array, state, n_heads: int):
+    """O(1) recurrent step. x: (B, 1, d)."""
+    b = x.shape[0]
+    up = dense(p["up"], x)
+    x_in, z = jnp.split(up, 2, axis=-1)
+    di = x_in.shape[-1]
+    hd = di // n_heads
+    qkv = dense(p["qkv"], x_in)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, n_heads, hd).astype(jnp.float32)
+    k = k.reshape(b, n_heads, hd).astype(jnp.float32) / jnp.sqrt(float(hd))
+    v = v.reshape(b, n_heads, hd).astype(jnp.float32)
+    log_i, log_f = _mlstm_gates(p, x_in, n_heads)
+    log_i, log_f = log_i[:, 0], log_f[:, 0]           # (B, H)
+
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    f_s = jnp.exp(log_f + state["m"] - m_new)
+    i_s = jnp.exp(log_i - m_new)
+    C = f_s[..., None, None] * state["C"] + i_s[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", k, v)
+    n = f_s[..., None] * state["n"] + i_s[..., None] * k
+    num = jnp.einsum("bhde,bhd->bhe", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)),
+                      jnp.exp(-m_new))
+    h = (num / (den[..., None] + 1e-6)).reshape(b, 1, di)
+    out = rms_norm(p["norm"], h.astype(x.dtype))
+    out = out * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return dense(p["down"], out), {"C": C, "n": n, "m": m_new}
+
+
+def init_mlstm_state(batch: int, d_inner: int, n_heads: int):
+    hd = d_inner // n_heads
+    return {
+        "C": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, hd), jnp.float32),
+        "m": jnp.full((batch, n_heads), -1e30, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, d_model: int, n_heads: int) -> Params:
+    ks = iter(jax.random.split(key, 4))
+    return {
+        # input projections for gates z, i, f, o (merged GEMM)
+        "w": init_dense(next(ks), d_model, 4 * d_model, bias=True),
+        # recurrent per-head block-diagonal connections, merged
+        "r": init_dense(next(ks), d_model, 4 * d_model, bias=False),
+        "norm": init_rms_norm(d_model),
+        "down": init_dense(next(ks), d_model, d_model, bias=False,
+                           zero_init=True),
+    }
+
+
+def _slstm_step(p, wx_t, state, d):
+    """One sLSTM step. wx_t: (B, 4d) precomputed input projection."""
+    h, c, n, m = state["h"], state["c"], state["n"], state["m"]
+    gates = wx_t + dense(p["r"], h).astype(jnp.float32)
+    z, i, f, o = jnp.split(gates, 4, axis=-1)         # (B, d) each
+    log_f = -jax.nn.softplus(-f)                      # forget via sigmoid
+    m_new = jnp.maximum(log_f + m, i)
+    i_s = jnp.exp(i - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * jnp.tanh(z)
+    n_new = f_s * n + i_s
+    h_new = jax.nn.sigmoid(o) * c_new / (n_new + 1e-6)
+    return {"h": h_new, "c": c_new, "n": n_new, "m": m_new}
+
+
+def slstm_forward(p: Params, x: jax.Array, state=None):
+    """Sequential scan over time. x: (B, S, d)."""
+    b, s, d = x.shape
+    wx = dense(p["w"], x).astype(jnp.float32)         # (B, S, 4d)
+    if state is None:
+        state = init_slstm_state(b, d)
+
+    def step(st, wx_t):
+        st = _slstm_step(p, wx_t, st, d)
+        return st, st["h"]
+
+    state, hs = jax.lax.scan(step, state, wx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)             # (B, S, d)
+    out = dense(p["down"], rms_norm(p["norm"], h))
+    return out, state
+
+
+def slstm_decode(p: Params, x: jax.Array, state):
+    b, _, d = x.shape
+    wx = dense(p["w"], x).astype(jnp.float32)[:, 0]
+    state = _slstm_step(p, wx, state, d)
+    h = state["h"][:, None].astype(x.dtype)
+    return dense(p["down"], rms_norm(p["norm"], h)), state
+
+
+def init_slstm_state(batch: int, d: int):
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, d), -1e30, jnp.float32)}

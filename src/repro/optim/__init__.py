@@ -1,0 +1,10 @@
+from repro.optim.optimizers import (  # noqa: F401
+    OptState,
+    adamw_init,
+    adamw_update,
+    lamb_init,
+    lamb_update,
+    clip_by_global_norm,
+    make_optimizer,
+)
+from repro.optim.schedules import cosine_schedule, linear_warmup  # noqa: F401

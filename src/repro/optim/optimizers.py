@@ -1,0 +1,120 @@
+"""Optimizers in pure JAX: AdamW (AlphaFold's choice) and LAMB (large-batch,
+paper §VI cites LAMB/LARS as the data-parallel-scaling tools).
+
+Optimizer state is fp32 regardless of param dtype (mixed-precision master
+copy lives in the fp32 `m`/`v` plus the fp32 params kept by TrainState).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+def _zeros_like(params, dtype):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, dtype), params)
+
+
+def adamw_init(params, *, state_dtype=jnp.float32) -> OptState:
+    """state_dtype=bfloat16 halves optimizer memory (beyond-paper lever used
+    by the 236B config on the 256-chip mesh; update math stays fp32 — moments
+    are cast up before use and down after)."""
+    return OptState(jnp.zeros((), jnp.int32), _zeros_like(params, state_dtype),
+                    _zeros_like(params, state_dtype))
+
+
+def adamw_update(
+    params,
+    grads,
+    state: OptState,
+    lr: jax.Array | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        sdt = m.dtype
+        m = (b1 * m.astype(jnp.float32) + (1 - b1) * g)
+        v = (b2 * v.astype(jnp.float32) + (1 - b2) * g * g)
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if weight_decay:
+            update = update + weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * update).astype(p.dtype),
+                m.astype(sdt), v.astype(sdt))
+
+    flat = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_p = jax.tree.map(lambda x: x[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda x: x[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda x: x[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, OptState(step, new_m, new_v)
+
+
+def lamb_init(params, *, state_dtype=jnp.float32) -> OptState:
+    return adamw_init(params, state_dtype=state_dtype)
+
+
+def lamb_update(
+    params,
+    grads,
+    state: OptState,
+    lr: jax.Array | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-6,
+    weight_decay: float = 0.01,
+):
+    """LAMB (You et al.): Adam direction with per-tensor trust ratio."""
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        pf = p.astype(jnp.float32)
+        sdt = m.dtype
+        m = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        r = (m / bc1) / (jnp.sqrt(v / bc2) + eps) + weight_decay * pf
+        w_norm = jnp.linalg.norm(pf)
+        r_norm = jnp.linalg.norm(r)
+        trust = jnp.where((w_norm > 0) & (r_norm > 0), w_norm / r_norm, 1.0)
+        return (pf - lr * trust * r).astype(p.dtype), m.astype(sdt), v.astype(sdt)
+
+    flat = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_p = jax.tree.map(lambda x: x[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda x: x[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda x: x[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, OptState(step, new_m, new_v)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-6))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def make_optimizer(name: str) -> tuple[Callable, Callable]:
+    if name == "adamw":
+        return adamw_init, adamw_update
+    if name == "lamb":
+        return lamb_init, lamb_update
+    raise ValueError(f"unknown optimizer {name!r}")

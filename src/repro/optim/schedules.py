@@ -1,0 +1,18 @@
+"""LR schedules (pure functions of the int step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, base_lr: float, warmup_steps: int):
+    s = jnp.asarray(step, jnp.float32)
+    return base_lr * jnp.minimum(1.0, (s + 1) / max(1, warmup_steps))
+
+
+def cosine_schedule(step, base_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1) / max(1, warmup_steps))
+    prog = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * cos

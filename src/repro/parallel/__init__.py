@@ -1,0 +1,1 @@
+from repro.parallel import plan  # noqa: F401

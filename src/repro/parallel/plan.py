@@ -1,0 +1,190 @@
+"""Sharding plans: (architecture x input-shape x mesh) -> PartitionSpecs.
+
+Parallelism composition (DESIGN.md §4):
+  * batch         -> ('pod', 'data')                       [data parallel]
+  * sequence/axial-> 'model'                               [DAP, the paper]
+  * parameters    -> replicated when the fp32 copy is small (paper-faithful
+                     DAP keeps full params per device: AlphaFold, musicgen,
+                     xlstm), otherwise sharded over 'model' (ZeRO-3-style,
+                     a beyond-paper necessity for the 7B..236B assigned archs)
+  * optimizer m/v -> always sharded (ZeRO-1) — the fp32 optimizer state never
+                     replicates
+  * MoE experts   -> expert axis over 'model' (EP); grouped dispatch keeps
+                     routing metadata shard-local
+  * KV caches     -> sequence axis over 'model' ('data'+'model' for the
+                     batch-1 long_500k shape)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
+
+# params whose fp32 bytes stay under this replicate (pure DAP, paper-faithful)
+REPLICATE_PARAM_BYTES = 2 << 30
+
+
+def batch_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def _divisible(n: int, axis_size: int) -> bool:
+    return n % axis_size == 0 and n >= axis_size
+
+
+# tensors above this (element count) also shard a second dim over 'data'
+# (ZeRO across the full mesh — a 236B fp32 optimizer state cannot live on a
+# single mesh axis's worth of shards).
+_SECOND_AXIS_ELEMS = 16 << 20
+
+
+def param_spec(path: str, shape: tuple, mesh, *, stacked: bool) -> P:
+    """Sharding rule for one parameter tensor. `stacked` marks a leading
+    layer axis (never sharded — it is scanned)."""
+    m = mesh.shape["model"]
+    d = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    zero_axes = (("pod", "data") if "pod" in mesh.shape else ("data",))
+    dims: list = [None] * len(shape)
+    size = 1
+    for s in shape:
+        size *= s
+    if size < (1 << 16):  # tiny tensors (norms, biases): replicate
+        return P(*dims)
+    start = 1 if stacked else 0
+    model_dim = None
+    if "experts" in path and _divisible(shape[start], m):
+        model_dim = start  # expert-parallel: shard the expert axis
+    else:
+        # largest divisible non-stacked dim over 'model'
+        for i in sorted(range(start, len(shape)), key=lambda i: -shape[i]):
+            if _divisible(shape[i], m):
+                model_dim = i
+                break
+    if model_dim is None:
+        return P(*dims)
+    dims[model_dim] = "model"
+    if size >= _SECOND_AXIS_ELEMS:
+        for i in sorted(range(start, len(shape)), key=lambda i: -shape[i]):
+            if i != model_dim and _divisible(shape[i], d):
+                dims[i] = zero_axes
+                break
+        else:
+            # single shardable dim: ride both axes on it if divisible
+            if _divisible(shape[model_dim], m * d):
+                dims[model_dim] = zero_axes + ("model",)
+    return P(*dims)
+
+
+def tree_param_specs(params, mesh) -> object:
+    """Specs for a full model param pytree (stacked stage params detected by
+    path containing 'stages')."""
+    def spec_for(path, leaf):
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        stacked = "stages" in pstr or "evoformer" in pstr
+        return param_spec(pstr, leaf.shape, mesh, stacked=stacked)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def tree_replicated(params) -> object:
+    return jax.tree.map(lambda _: P(), params)
+
+
+def params_fp32_bytes(params) -> int:
+    return sum(leaf.size * 4 for leaf in jax.tree.leaves(params))
+
+
+def model_param_specs(params, mesh, *, force_shard: bool | None = None):
+    """Param specs: replicated (paper-faithful DAP) for small models, sharded
+    otherwise."""
+    shard = (params_fp32_bytes(params) > REPLICATE_PARAM_BYTES
+             if force_shard is None else force_shard)
+    return tree_param_specs(params, mesh) if shard else tree_replicated(params)
+
+
+def train_state_specs(state, mesh, param_specs):
+    """TrainState sharding: params per plan; m/v ALWAYS sharded (ZeRO-1)."""
+    from repro.train.state import TrainState
+    mv_specs = tree_param_specs(state.params, mesh)
+    return TrainState(
+        step=P(),
+        params=param_specs,
+        opt_state=type(state.opt_state)(
+            step=P(), m=mv_specs, v=mv_specs),
+    )
+
+
+# ---------------------------------------------------------------------------
+# activations / inputs
+# ---------------------------------------------------------------------------
+
+def seq_axes(mesh, shape: ShapeConfig):
+    """Mesh axes sharding the sequence dim: DAP 'model'; long_500k rides every
+    axis (batch=1 leaves data idle)."""
+    if shape.global_batch == 1:
+        return batch_axes(mesh) + ("model",)
+    return ("model",)
+
+
+def token_spec(mesh, shape: ShapeConfig) -> P:
+    if shape.kind == "decode":
+        return P(batch_axes(mesh) if shape.global_batch > 1 else None, None)
+    return P(batch_axes(mesh), seq_axes(mesh, shape))
+
+
+def make_shard_x(mesh, shape: ShapeConfig):
+    """Residual-stream constrainer: (B, S, d) pinned to DAP sharding."""
+    if shape.kind == "decode":
+        spec = P(batch_axes(mesh) if shape.global_batch > 1 else None,
+                 None, None)
+    else:
+        spec = P(batch_axes(mesh), seq_axes(mesh, shape), None)
+    sharding = NamedSharding(mesh, spec)
+
+    def constrain(x):
+        return jax.lax.with_sharding_constraint(x, sharding)
+
+    return constrain
+
+
+def cache_specs(cache, mesh, shape: ShapeConfig, cfg: ModelConfig):
+    """Decode-cache sharding: stacked (count, B, S, ...) KV caches shard their
+    sequence axis; SSM/mLSTM states shard the feature axis."""
+    b_ax = batch_axes(mesh) if shape.global_batch > 1 else None
+    s_ax = seq_axes(mesh, shape)
+    m = mesh.shape["model"]
+
+    def spec_for(path, leaf):
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        shp = leaf.shape  # leading dim = stage layer count
+        dims = [None] * len(shp)
+        dims[1] = b_ax
+        if ("k" in pstr.split("/")[-1] or "v" in pstr.split("/")[-1]
+                or "c_kv" in pstr or "k_rope" in pstr) and len(shp) >= 3:
+            # (count, B, S, ...) — shard seq if long enough
+            if _divisible(shp[2], max(m, 2)):
+                dims[2] = s_ax
+            return P(*dims)
+        # states: (count, B, di, n) / (count, B, H, hd[, hd]) / conv
+        for i in range(2, len(shp)):
+            if _divisible(shp[i], m):
+                dims[i] = "model"
+                break
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def moe_with_groups(cfg: ModelConfig, mesh) -> ModelConfig:
+    """Set MoE dispatch groups to the DAP degree for shard-local routing."""
+    if cfg.moe is None:
+        return cfg
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, n_groups=mesh.shape["model"]))

@@ -1,0 +1,403 @@
+"""Roofline analysis from the compiled dry-run artifact (no real hardware).
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+  compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory     = HLO_bytes / (chips * HBM_bw)
+  collective = wire_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis(). wire_bytes are
+parsed from the optimized HLO text: every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute payload, scaled by the
+ring-algorithm wire factor for its replica-group size.
+
+Ops inside while-loops (lax.scan layer stacks, flash-attention KV loops)
+appear once in the HLO but execute trip-count times; we reconstruct per-
+computation execution multipliers from the `known_trip_count` annotations
+(products across nested loops) and scale both the collective payloads and
+the cost_analysis numbers accordingly.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-to-all", "all-gather", "all-reduce", "reduce-scatter",
+                "collective-permute")
+
+# wire factor per participant for ring algorithms (group size n):
+_WIRE_FACTOR = {
+    "all-gather": lambda n: (n - 1) / n,       # payload = full output
+    "reduce-scatter": lambda n: (n - 1) / n,   # payload = full input
+    "all-reduce": lambda n: 2 * (n - 1) / n,
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    """'bf16[2,512,64]' or '(bf16[...], f32[...])' -> total bytes."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """computation name -> its body lines."""
+    comps: dict[str, list[str]] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$",
+                     line)
+        if m:
+            current = m.group(1)
+            comps[current] = []
+            continue
+        if current is not None:
+            if line.strip() == "}":
+                current = None
+                continue
+            comps[current].append(line)
+    return comps
+
+
+def _execution_scales(comps: dict[str, list[str]]) -> dict[str, float]:
+    """Per-computation execution multiplier from nested while trip counts."""
+    # edges: parent comp -> (child comp, multiplier)
+    edges: dict[str, list[tuple[str, float]]] = {name: [] for name in comps}
+    for name, lines in comps.items():
+        for ln in lines:
+            mult = 1.0
+            mt = re.search(r'known_trip_count[^\d]*(\d+)', ln)
+            if " while(" in ln and mt:
+                mult = float(mt.group(1))
+            for attr in ("body", "condition", "to_apply", "calls",
+                         "branch_computations"):
+                for m in re.finditer(attr + r"=\{?%?([\w.\-]+)", ln):
+                    child = m.group(1)
+                    if child in comps:
+                        edges[name].append((child, mult))
+
+    # propagate from entry (computations not referenced by others)
+    referenced = {c for lst in edges.values() for c, _ in lst}
+    scales = {name: (1.0 if name not in referenced else 0.0)
+              for name in comps}
+    # relax: a few passes suffice (call graphs are shallow)
+    for _ in range(12):
+        changed = False
+        for parent, lst in edges.items():
+            for child, mult in lst:
+                cand = scales[parent] * mult
+                if cand > scales.get(child, 0.0):
+                    scales[child] = cand
+                    changed = True
+        if not changed:
+            break
+    return scales
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)
+    payload_bytes: dict = field(default_factory=dict)
+    wire_bytes: float = 0.0
+
+
+def parse_collectives(hlo_text: str, default_group: int) -> CollectiveStats:
+    """Sum collective payloads from optimized HLO, scaled by loop trips."""
+    comps = _split_computations(hlo_text)
+    scales = _execution_scales(comps)
+    stats = CollectiveStats()
+    for name, lines in comps.items():
+        scale = max(scales.get(name, 1.0), 1.0)
+        for line in lines:
+            for op in _COLLECTIVES:
+                m = re.search(
+                    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\]\S*))\s+"
+                    + op + r"(-start)?\(", line)
+                if m:
+                    payload = _shape_bytes(m.group(1))
+                    n = _group_size(line, default_group)
+                    factor = _WIRE_FACTOR[op](max(n, 2))
+                    stats.counts[op] = stats.counts.get(op, 0) + 1
+                    stats.payload_bytes[op] = (
+                        stats.payload_bytes.get(op, 0.0) + payload * scale)
+                    stats.wire_bytes += payload * factor * scale
+                    break
+    return stats
+
+
+def cost_scale_factor(hlo_text: str) -> float:
+    """cost_analysis() counts while bodies once; the dominant layer-stack loop
+    multiplies real cost. We use the max product of nested trip counts as the
+    whole-program scale (exact for cost dominated by the layer scan)."""
+    comps = _split_computations(hlo_text)
+    scales = _execution_scales(comps)
+    return max(list(scales.values()) + [1.0])
+
+
+_SKIP_BYTE_OPS = ("parameter(", "constant(", "get-tuple-element(", "tuple(",
+                  "bitcast(", "after-all(", "iota(", "partition-id(",
+                  "replica-id(")
+
+
+def _symbols(lines: list[str]) -> dict[str, tuple[list[int], int]]:
+    """name -> (result dims, result bytes) for ops defined in a computation."""
+    table: dict[str, tuple[list[int], int]] = {}
+    for ln in lines:
+        m = re.match(r"\s*%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\]))",
+                     ln)
+        if m:
+            md = re.match(r"\w+\[([\d,]*)\]", m.group(2))
+            dims = ([int(d) for d in md.group(1).split(",") if d]
+                    if md else [])
+            table[m.group(1)] = (dims, _shape_bytes(m.group(2)))
+    return table
+
+
+def _dot_flops(line: str, symtab: dict[str, list[int]]) -> float:
+    """FLOPs of a `dot` op: 2 * prod(result dims) * prod(contracting sizes).
+    Operand shapes resolved via the computation's symbol table (XLA prints
+    operands by name only)."""
+    m = re.search(r"=\s*\w+\[([\d,]*)\]\S*\s+dot\(\s*%?([\w.\-]+)", line)
+    if not m:
+        return 0.0
+    res_dims = [int(d) for d in m.group(1).split(",") if d] or [1]
+    lhs_dims = (symtab.get(m.group(2)) or ([], 0))[0]
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    contract = 1
+    if lhs_dims and mc and mc.group(1):
+        for i in mc.group(1).split(","):
+            ii = int(i)
+            if ii < len(lhs_dims):
+                contract *= lhs_dims[ii]
+    out = 1
+    for d in res_dims:
+        out *= d
+    return 2.0 * out * contract
+
+
+def _line_io_bytes(line: str, symtab) -> int:
+    """HBM-traffic estimate of one top-level HLO op: result bytes + operand
+    bytes (fusion I/O == the fused kernel's memory traffic). Operands are
+    printed by name; sizes resolved via the symbol table."""
+    m = re.search(r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\]\S*))\s+([\w\-]+)\(",
+                  line)
+    if not m:
+        return 0
+    out_b = _shape_bytes(m.group(1))
+    in_b = 0
+    mop = re.search(r"[\w\-]+\((.*?)\)(?:,|$)", line)
+    if mop:
+        for name in re.findall(r"%([\w.\-]+)", mop.group(1)):
+            in_b += (symtab.get(name) or ([], 0))[1]
+    return out_b + in_b
+
+
+_SLICE_OPS = (" dynamic-slice(", " gather(")
+
+
+def _fusion_root_out_bytes(lines: list[str]) -> float | None:
+    """If a fused computation's ROOT is a dynamic-update-slice, the fusion's
+    output HBM traffic is the update slice (in-place slot write), not the
+    full buffer. Returns effective out bytes or None."""
+    symtab = _symbols(lines)
+    for ln in lines:
+        if "ROOT" in ln and " dynamic-update-slice(" in ln:
+            mu = re.search(r"dynamic-update-slice\(\s*%[\w.\-]+,\s*%([\w.\-]+)",
+                           ln)
+            if mu:
+                return float((symtab.get(mu.group(1)) or ([], 0))[1])
+    return None
+
+
+def _fusion_param_effective(lines: list[str]) -> dict[int, float]:
+    """For a fused computation: parameter index -> effective HBM bytes.
+
+    A parameter consumed only through dynamic-slice/gather contributes the
+    *slice* bytes, not its full size (the scan-body weight stack is the
+    canonical case: (L, d, f) stacked weights, (1, d, f) read per step).
+    A parameter updated through dynamic-update-slice contributes the update
+    bytes (read+write of the touched slot)."""
+    symtab = _symbols(lines)
+    params: dict[str, int] = {}
+    for ln in lines:
+        m = re.match(r"\s*%?([\w.\-]+)\s*=\s*\S+\s+parameter\((\d+)\)", ln)
+        if m:
+            params[m.group(1)] = int(m.group(2))
+    eff: dict[int, float] = {}
+    consumers: dict[str, list[str]] = {p: [] for p in params}
+    for ln in lines:
+        mop = re.search(r"=\s*\S+\s+([\w\-]+)\((.*?)\)(?:,|$)", ln)
+        if not mop:
+            continue
+        for name in re.findall(r"%([\w.\-]+)", mop.group(2)):
+            if name in consumers:
+                consumers[name].append(ln)
+    for pname, uses in consumers.items():
+        idx = params[pname]
+        full = (symtab.get(pname) or ([], 0))[1]
+        if uses and all(
+            any(s in u for s in _SLICE_OPS) or " dynamic-update-slice(" in u
+            for u in uses
+        ):
+            b = 0.0
+            for u in uses:
+                if " dynamic-update-slice(" in u:
+                    mu = re.search(r"dynamic-update-slice\(\s*%[\w.\-]+,\s*"
+                                   r"%([\w.\-]+)", u)
+                    upd = (symtab.get(mu.group(1)) or ([], 0))[1] if mu else 0
+                    b += 2.0 * upd
+                else:
+                    mres = re.search(r"=\s*((?:\w+\[[\d,]*\]))", u)
+                    b += _shape_bytes(mres.group(1)) if mres else 0
+            eff[idx] = max(b, 1.0)
+        else:
+            eff[idx] = float(full)
+    return eff
+
+
+def hlo_cost(hlo_text: str) -> tuple[float, float]:
+    """(flops, hbm_bytes) of the per-device SPMD program, with while-loop
+    trip scaling.
+
+    flops: every `dot` op, in whatever computation, scaled by its execution
+    multiplier (fused or not — MXU work is MXU work).
+    bytes: I/O of top-level ops in non-fusion computations (a fusion's HBM
+    traffic is its operands + result, with dynamic-slice-consumed operands
+    counted at slice size), scaled.
+    """
+    comps = _split_computations(hlo_text)
+    scales = _execution_scales(comps)
+    fused = set()
+    for lines in comps.values():
+        for ln in lines:
+            if " fusion(" in ln:
+                for m in re.finditer(r"calls=%?([\w.\-]+)", ln):
+                    fused.add(m.group(1))
+    fusion_eff = {name: _fusion_param_effective(comps[name])
+                  for name in fused if name in comps}
+    fusion_out = {name: _fusion_root_out_bytes(comps[name])
+                  for name in fused if name in comps}
+
+    flops = 0.0
+    bytes_ = 0.0
+    for name, lines in comps.items():
+        scale = max(scales.get(name, 1.0), 1.0)
+        body_is_fused = name in fused or name.startswith("fused")
+        symtab = _symbols(lines)
+        for ln in lines:
+            if " dot(" in ln:
+                flops += _dot_flops(ln, symtab) * scale
+            if body_is_fused:
+                continue
+            if any(op in ln for op in _SKIP_BYTE_OPS):
+                continue
+            if "=" not in ln:
+                continue
+            bytes_ += _op_bytes(ln, symtab, fusion_eff, fusion_out) * scale
+    return flops, bytes_
+
+
+def _op_bytes(line: str, symtab, fusion_eff, fusion_out) -> float:
+    """HBM bytes of one top-level op with slice-aware special cases."""
+    mres = re.search(r"=\s*((?:\([^=]*?\))|(?:\w+\[[\d,]*\]\S*))\s+([\w\-]+)\(",
+                     line)
+    if not mres:
+        return 0.0
+    out_b = _shape_bytes(mres.group(1))
+    op = mres.group(2)
+    mop = re.search(r"[\w\-]+\((.*?)\)(?:,|$)", line)
+    operands = re.findall(r"%([\w.\-]+)", mop.group(1)) if mop else []
+    if op in ("dynamic-slice", "gather"):
+        return 2.0 * out_b
+    if op == "dynamic-update-slice":
+        upd = (symtab.get(operands[1]) or ([], 0))[1] if len(operands) > 1 else 0
+        return 2.0 * upd
+    if op == "scatter":
+        upd = (symtab.get(operands[-1]) or ([], 0))[1] if operands else 0
+        return 2.0 * upd
+    if op == "fusion":
+        mcalls = re.search(r"calls=%?([\w.\-]+)", line)
+        cname = mcalls.group(1) if mcalls else None
+        eff = fusion_eff.get(cname, {})
+        root_out = fusion_out.get(cname)
+        if root_out is not None:
+            out_b = 2.0 * root_out
+        in_b = 0.0
+        for i, name in enumerate(operands):
+            full = (symtab.get(name) or ([], 0))[1]
+            in_b += eff.get(i, float(full))
+        return out_b + in_b
+    in_b = sum((symtab.get(n) or ([], 0))[1] for n in operands)
+    return out_b + in_b
+
+
+@dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    wire_bytes: float
+    chips: int
+    peak_flops: float
+    hbm_bw: float
+    ici_bw: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * self.peak_flops)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * self.hbm_bw)
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes / (self.chips * self.ici_bw)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "wire_bytes": self.wire_bytes,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def model_flops(shape, n_params_active: int) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference forward)."""
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_params_active * tokens

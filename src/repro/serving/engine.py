@@ -1,0 +1,129 @@
+"""Batched serving engine: slot-based continuous batching over the decoder's
+prefill/decode steps (the inference-side counterpart of the paper's
+distributed long-sequence inference — the same model_forward lowers under
+DAP/GSPMD shardings for the multi-device path).
+
+Design: a fixed number of slots share one batched KV cache. Requests are
+admitted into free slots (B=1 prefill, cache rows scattered into the slot),
+all active slots advance together with one batched decode step per token,
+finished sequences free their slots immediately.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.decoder import init_cache, model_forward
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                     # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0               # 0 => greedy
+    eos_id: Optional[int] = None
+    # outputs
+    generated: list = field(default_factory=list)
+    done: bool = False
+
+
+def sample_token(logits, rng, temperature: float):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(rng, logits / temperature, axis=-1)
+
+
+class ServingEngine:
+    def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
+                 max_seq: int = 512, dtype=jnp.bfloat16):
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.cache = init_cache(cfg, n_slots, max_seq, dtype)
+        self.lengths = jnp.zeros((n_slots,), jnp.int32)
+        self.slot_req: list[Optional[Request]] = [None] * n_slots
+        self.pending: list[Request] = []
+        self.finished: list[Request] = []
+        self._rng = jax.random.PRNGKey(0)
+        self._next_uid = 0
+
+        self._decode = jax.jit(
+            lambda params, toks, cache, lengths: model_forward(
+                params, toks, cfg, mode="decode", cache=cache,
+                lengths=lengths)
+        )
+
+    def submit(self, prompt: np.ndarray, **kw) -> Request:
+        req = Request(uid=self._next_uid, prompt=np.asarray(prompt, np.int32),
+                      **kw)
+        self._next_uid += 1
+        self.pending.append(req)
+        return req
+
+    # --- internals ---
+
+    def _admit(self):
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] is not None or not self.pending:
+                continue
+            req = self.pending.pop(0)
+            prompt = jnp.asarray(req.prompt)[None]            # (1, S)
+            out = model_forward(
+                self.params, prompt, self.cfg, mode="prefill",
+                max_cache_len=self.max_seq)
+            # scatter the single-row cache into this slot
+            self.cache = jax.tree.map(
+                lambda full, one: full.at[:, slot].set(one[:, 0]),
+                self.cache, out["cache"])
+            self.lengths = self.lengths.at[slot].set(len(req.prompt))
+            self.slot_req[slot] = req
+            # first generated token comes from the prefill logits
+            self._emit(slot, out["logits"][0, -1], req)
+
+    def _emit(self, slot: int, logits, req: Request):
+        self._rng, sub = jax.random.split(self._rng)
+        tok = int(sample_token(logits, sub, req.temperature))
+        req.generated.append(tok)
+        if (req.eos_id is not None and tok == req.eos_id) or \
+                len(req.generated) >= req.max_new_tokens:
+            req.done = True
+            self.finished.append(req)
+            self.slot_req[slot] = None
+            self.lengths = self.lengths.at[slot].set(0)
+
+    def step(self):
+        """One batched decode step across all active slots."""
+        self._admit()
+        active = [s for s, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return False
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        for s in active:
+            toks[s, 0] = self.slot_req[s].generated[-1]
+        out = self._decode(self.params, jnp.asarray(toks), self.cache,
+                           self.lengths)
+        self.cache = out["cache"]
+        self.lengths = self.lengths + jnp.asarray(
+            [1 if self.slot_req[s] is not None else 0
+             for s in range(self.n_slots)], jnp.int32)
+        logits = out["logits"][:, 0]
+        for s in active:
+            req = self.slot_req[s]
+            if req is not None:
+                self._emit(s, logits[s], req)
+        return True
+
+    def run(self):
+        """Drain all pending + active requests; returns finished Requests."""
+        while self.pending or any(r is not None for r in self.slot_req):
+            progressed = self.step()
+            if not progressed and not self.pending:
+                break
+        return self.finished

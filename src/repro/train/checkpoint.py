@@ -1,0 +1,91 @@
+"""Checkpointing: pytree <-> .npz with path-flattened keys + JSON metadata.
+
+Atomic (tmp + rename), keeps the last `keep` checkpoints, restores into the
+example tree's structure/dtypes (so bf16 params round-trip exactly).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        # npz has no bf16/f8 codecs: store exotic float dtypes as f32
+        # (bf16 -> f32 -> bf16 round-trips exactly); restore casts back.
+        if arr.dtype.kind == "V" or arr.dtype.name in ("bfloat16",
+                                                       "float8_e4m3fn",
+                                                       "float8_e5m2"):
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree, *, keep: int = 3,
+                    metadata: dict | None = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".npz")
+    os.close(fd)
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+    meta = {"step": step}
+    meta.update(metadata or {})
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+    _gc(directory, keep)
+    return path
+
+
+def _gc(directory: str, keep: int):
+    ckpts = sorted(
+        f for f in os.listdir(directory)
+        if re.fullmatch(r"ckpt_\d+\.npz", f)
+    )
+    for old in ckpts[:-keep]:
+        os.remove(os.path.join(directory, old))
+        meta = os.path.join(directory, old + ".json")
+        if os.path.exists(meta):
+            os.remove(meta)
+
+
+def latest_checkpoint(directory: str) -> str | None:
+    if not os.path.isdir(directory):
+        return None
+    ckpts = sorted(
+        f for f in os.listdir(directory)
+        if re.fullmatch(r"ckpt_\d+\.npz", f)
+    )
+    return os.path.join(directory, ckpts[-1]) if ckpts else None
+
+
+def restore_checkpoint(path: str, example_tree):
+    """Restore into example_tree's structure, casting to its leaf dtypes."""
+    data = np.load(path)
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(example_tree)
+    new_leaves = []
+    for kpath, leaf in leaves_p:
+        key = "/".join(_path_str(p) for p in kpath)
+        arr = data[key]
+        new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

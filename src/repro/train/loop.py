@@ -1,0 +1,76 @@
+"""Training step factory: loss -> grads (bf16 compute, fp32 reduce) ->
+global-norm clip -> LR schedule -> optimizer -> new state. Supports gradient
+accumulation (the paper's micro-batching for DP scaling) and composes with
+pjit shardings supplied by parallel/plan.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import clip_by_global_norm, make_optimizer
+from repro.optim.schedules import cosine_schedule
+from repro.train.state import TrainState, make_train_state
+
+
+def make_train_step(
+    loss_fn: Callable,                    # (params, batch, rng) -> (loss, metrics)
+    *,
+    optimizer: str = "adamw",
+    base_lr: float = 1e-3,
+    warmup_steps: int = 100,
+    total_steps: int = 10_000,
+    weight_decay: float = 0.0,
+    clip_norm: float = 1.0,
+    accum_steps: int = 1,
+    state_dtype=jnp.float32,
+):
+    opt_init_raw, opt_update = make_optimizer(optimizer)
+    opt_init = partial(opt_init_raw, state_dtype=state_dtype)
+
+    def init_state(params) -> TrainState:
+        return make_train_state(params, opt_init)
+
+    def compute_grads(params, batch, rng):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, rng)
+        return loss, metrics, grads
+
+    def train_step(state: TrainState, batch, rng=None):
+        if accum_steps == 1:
+            loss, metrics, grads = compute_grads(state.params, batch, rng)
+        else:
+            # micro-batching: batch leading dim must divide accum_steps
+            def micro(i, carry):
+                acc, loss_acc = carry
+                mb = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // accum_steps),
+                        x.shape[0] // accum_steps, axis=0), batch)
+                r = jax.random.fold_in(rng, i) if rng is not None else None
+                loss, metrics, grads = compute_grads(state.params, mb, r)
+                acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                   acc, grads)
+                return acc, loss_acc + loss
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            grads, loss_sum = jax.lax.fori_loop(
+                0, accum_steps, micro, (zeros, jnp.zeros((), jnp.float32)))
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss_sum / accum_steps
+            metrics = {"loss": loss}
+
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = cosine_schedule(state.step, base_lr, warmup_steps, total_steps)
+        new_params, new_opt = opt_update(
+            state.params, grads, state.opt_state, lr,
+            weight_decay=weight_decay)
+        metrics = dict(metrics)
+        metrics.update({"grad_norm": gnorm, "lr": lr})
+        return TrainState(state.step + 1, new_params, new_opt), metrics
+
+    return init_state, train_step

@@ -1,0 +1,17 @@
+"""TrainState: fp32 master params + optimizer state + step counter."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: dict
+    opt_state: object
+
+
+def make_train_state(params, opt_init) -> TrainState:
+    return TrainState(jnp.zeros((), jnp.int32), params, opt_init(params))

@@ -1,0 +1,11 @@
+import os
+import sys
+
+# NOTE: no --xla_force_host_platform_device_count here — smoke tests and
+# benches must see 1 device. Multi-device tests spawn subprocesses that set
+# the flag before importing jax (see test_distributed.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "highest")

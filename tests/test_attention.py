@@ -1,0 +1,137 @@
+"""Attention strategy tests: every execution strategy vs a naive reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.layers.attention import (
+    AttnDims,
+    _expand_kv,
+    blockwise_attention,
+    decode_attention,
+    evoformer_attention,
+    init_attention,
+    project_qkv,
+    output_proj,
+    sliding_window_attention,
+)
+
+HD = 16
+
+
+def ref_attn(q, k, v, causal=True, window=None, q_offset=0, bias=None):
+    kk = _expand_kv(k, q.shape[2])
+    vv = _expand_kv(v, q.shape[2])
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / np.sqrt(q.shape[-1])
+    if bias is not None:
+        s = s + bias
+    if causal:
+        qpos = q_offset + jnp.arange(q.shape[1])
+        kpos = jnp.arange(kk.shape[1])
+        m = qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            m &= kpos[None, :] > qpos[:, None] - window - 1
+        s = jnp.where(m, s, -1e9)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+
+
+@pytest.fixture
+def qkv():
+    B, S, H, KV = 2, 64, 4, 2
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, HD))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, HD))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, HD))
+    return q, k, v
+
+
+@pytest.mark.parametrize("q_block,kv_block", [(16, 16), (64, 32), (8, 64)])
+def test_blockwise_matches_reference(qkv, q_block, kv_block):
+    q, k, v = qkv
+    got = blockwise_attention(q, k, v, causal=True, q_block=q_block,
+                              kv_block=kv_block)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref_attn(q, k, v)),
+                               atol=2e-5)
+
+
+def test_blockwise_offset_shard_semantics(qkv):
+    q, k, v = qkv
+    S2 = 32
+    got = blockwise_attention(q[:, S2:], k, v, causal=True, q_offset=S2,
+                              q_block=16, kv_block=16)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref_attn(q, k, v))[:, S2:],
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [8, 24, 64])
+def test_sliding_window_matches_reference(qkv, window):
+    q, k, v = qkv
+    got = sliding_window_attention(q, k, v, window=window, q_block=16)
+    want = ref_attn(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_decode_matches_reference(qkv):
+    q, k, v = qkv
+    t = 42
+    got = decode_attention(q[:, t:t + 1], k, v,
+                           jnp.array([t + 1, t + 1]))
+    np.testing.assert_allclose(np.asarray(got)[:, 0],
+                               np.asarray(ref_attn(q, k, v))[:, t],
+                               atol=2e-5)
+
+
+def test_decode_respects_lengths(qkv):
+    """Entries beyond cache_len must not affect the result."""
+    q, k, v = qkv
+    t = 20
+    got1 = decode_attention(q[:, t:t + 1], k, v, jnp.array([t + 1, t + 1]))
+    k2 = k.at[:, t + 1:].set(999.0)
+    v2 = v.at[:, t + 1:].set(-999.0)
+    got2 = decode_attention(q[:, t:t + 1], k2, v2, jnp.array([t + 1, t + 1]))
+    np.testing.assert_allclose(np.asarray(got1), np.asarray(got2), atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.sampled_from([16, 32, 48]), h=st.sampled_from([1, 2, 4]),
+       seed=st.integers(0, 1000))
+def test_causality_property(s, h, seed):
+    """Perturbing future tokens never changes past outputs."""
+    B = 1
+    q = jax.random.normal(jax.random.PRNGKey(seed), (B, s, h, HD))
+    k = jax.random.normal(jax.random.PRNGKey(seed + 1), (B, s, h, HD))
+    v = jax.random.normal(jax.random.PRNGKey(seed + 2), (B, s, h, HD))
+    cut = s // 2
+    out1 = blockwise_attention(q, k, v, causal=True, q_block=8, kv_block=8)
+    k2 = k.at[:, cut:].add(5.0)
+    v2 = v.at[:, cut:].add(-3.0)
+    out2 = blockwise_attention(q, k2, v2, causal=True, q_block=8, kv_block=8)
+    np.testing.assert_allclose(np.asarray(out1[:, :cut]),
+                               np.asarray(out2[:, :cut]), atol=1e-5)
+
+
+def test_evoformer_attention_bias_mask():
+    n, s, h = 3, 10, 4
+    q = jax.random.normal(jax.random.PRNGKey(0), (n, s, h, HD))
+    k = jax.random.normal(jax.random.PRNGKey(1), (n, s, h, HD))
+    v = jax.random.normal(jax.random.PRNGKey(2), (n, s, h, HD))
+    bias = jax.random.normal(jax.random.PRNGKey(3), (h, s, s))
+    got = evoformer_attention(q, k, v, bias=bias)
+    want = ref_attn(q, k, v, causal=False, bias=bias[None])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_gqa_project_shapes_and_merged_gemm():
+    d, h, kv = 32, 4, 2
+    p = init_attention(jax.random.PRNGKey(0), d, h, kv, HD, qkv_bias=True,
+                       gating=True)
+    assert p["wqkv"]["w"].shape == (d, (h + 2 * kv) * HD)  # merged QKV
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, d))
+    q, k, v = project_qkv(p, x, AttnDims(h, kv, HD), jnp.float32)
+    assert q.shape == (2, 6, h, HD)
+    assert k.shape == (2, 6, kv, HD)
+    ctx = jnp.ones((2, 6, h, HD))
+    out = output_proj(p, ctx, x_for_gate=x)
+    assert out.shape == (2, 6, d)

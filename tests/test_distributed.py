@@ -1,0 +1,141 @@
+"""Distributed-equivalence tests (paper-faithful DAP + TP baseline).
+
+These run in subprocesses with XLA_FLAGS=--xla_force_host_platform_device_count
+set *before* jax import, keeping the main test process at 1 device.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(script: str, devices: int = 4) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+DAP_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.evoformer import EvoformerConfig, init_evoformer_stack, evoformer_stack
+from repro.core.dap import dap_evoformer_stack, shard_dap_inputs
+cfg = EvoformerConfig(d_msa=32, d_pair=16, msa_heads=4, pair_heads=2, head_dim=8,
+                      opm_dim=8, tri_mult_dim=16, n_blocks=2)
+params = init_evoformer_stack(jax.random.PRNGKey(0), cfg)
+B,s,r = 2,8,12
+msa = jax.random.normal(jax.random.PRNGKey(1),(B,s,r,cfg.d_msa))
+pair = jax.random.normal(jax.random.PRNGKey(2),(B,r,r,cfg.d_pair))
+masks = (jnp.ones((B,s,r)), jnp.ones((B,r)), jnp.ones((B,r,r)))
+m_ref, p_ref = evoformer_stack(params, msa, pair, *masks, cfg=cfg, remat=False)
+mesh = jax.make_mesh((1,4), ("data","model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+fn = jax.jit(dap_evoformer_stack(mesh, cfg, remat=False))
+args = shard_dap_inputs(mesh, msa, pair, *masks)
+m_dap, p_dap = fn(params, *args)
+np.testing.assert_allclose(np.asarray(m_dap), np.asarray(m_ref), atol=3e-5)
+np.testing.assert_allclose(np.asarray(p_dap), np.asarray(p_ref), atol=3e-5)
+import re
+txt = fn.lower(params, *args).compile().as_text()
+n_a2a = len(re.findall(r"all-to-all", txt))
+n_ag = len(re.findall(r"all-gather", txt))
+assert n_a2a > 0 and n_ag > 0, (n_a2a, n_ag)
+print("DAP_OK", n_a2a, n_ag)
+"""
+
+
+TP_SCRIPT = r"""
+import re, numpy as np, jax, jax.numpy as jnp
+from repro.core.evoformer import EvoformerConfig, init_evoformer_stack, evoformer_stack
+from repro.core.tp import tp_evoformer_stack
+cfg = EvoformerConfig(d_msa=32, d_pair=16, msa_heads=4, pair_heads=2, head_dim=8,
+                      opm_dim=8, tri_mult_dim=16, n_blocks=2)
+params = init_evoformer_stack(jax.random.PRNGKey(0), cfg)
+B,s,r = 2,6,10
+msa = jax.random.normal(jax.random.PRNGKey(1),(B,s,r,cfg.d_msa))
+pair = jax.random.normal(jax.random.PRNGKey(2),(B,r,r,cfg.d_pair))
+masks = (jnp.ones((B,s,r)), jnp.ones((B,r)), jnp.ones((B,r,r)))
+m_ref, p_ref = evoformer_stack(params, msa, pair, *masks, cfg=cfg, remat=False)
+mesh = jax.make_mesh((1,2), ("data","model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+fn = jax.jit(tp_evoformer_stack(mesh, cfg, remat=False))
+m_tp, p_tp = fn(params, msa, pair, *masks)
+np.testing.assert_allclose(np.asarray(m_tp), np.asarray(m_ref), atol=3e-5)
+np.testing.assert_allclose(np.asarray(p_tp), np.asarray(p_ref), atol=3e-5)
+txt = fn.lower(params, msa, pair, *masks).compile().as_text()
+n_ar = len(re.findall(r"all-reduce", txt))
+# paper Table III: 6 AllReduce in the forward pass per block
+assert n_ar == 6, n_ar
+print("TP_OK", n_ar)
+"""
+
+
+LM_GSPMD_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config
+from repro.models.decoder import init_model, lm_loss
+cfg = get_config("qwen2-1.5b", reduced_variant=True)
+params = init_model(jax.random.PRNGKey(0), cfg)
+B, S = 4, 32
+toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+batch = {"tokens": toks, "targets": toks, "mask": jnp.ones((B, S))}
+loss_ref, _ = lm_loss(params, batch, cfg)
+mesh = jax.make_mesh((2, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+def shard_x(x):
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P("data", "model", None)))
+with jax.set_mesh(mesh):
+    loss_sharded, _ = jax.jit(
+        lambda p, b: lm_loss(p, b, cfg, shard_x=shard_x))(params, batch)
+np.testing.assert_allclose(float(loss_sharded), float(loss_ref), rtol=1e-4)
+print("GSPMD_LM_OK", float(loss_sharded))
+"""
+
+
+MINI_DRYRUN_SCRIPT = r"""
+import jax, jax.numpy as jnp
+from repro.configs import get_config, INPUT_SHAPES
+import repro.launch.dryrun as dr
+import dataclasses
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+cfg = get_config("qwen2-1.5b", reduced_variant=True)
+shape = dataclasses.replace(INPUT_SHAPES["train_4k"], seq_len=64, global_batch=4)
+fn, args, in_sh, out_sh = dr.build_train(cfg, shape, mesh)
+with jax.set_mesh(mesh):
+    compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*args).compile()
+mem = compiled.memory_analysis()
+assert mem is not None
+from repro.roofline import analysis
+flops, bts = analysis.hlo_cost(compiled.as_text())
+assert flops > 0 and bts > 0
+print("MINI_DRYRUN_OK", flops > 0)
+"""
+
+
+@pytest.mark.slow
+def test_dap_shard_map_equals_local_oracle():
+    assert "DAP_OK" in run_sub(DAP_SCRIPT, devices=4)
+
+
+@pytest.mark.slow
+def test_tp_equals_local_oracle_and_allreduce_count():
+    assert "TP_OK 6" in run_sub(TP_SCRIPT, devices=2)
+
+
+@pytest.mark.slow
+def test_gspmd_lm_loss_matches_single_device():
+    assert "GSPMD_LM_OK" in run_sub(LM_GSPMD_SCRIPT, devices=4)
+
+
+@pytest.mark.slow
+def test_mini_dryrun_compiles_and_analyzes():
+    assert "MINI_DRYRUN_OK" in run_sub(MINI_DRYRUN_SCRIPT, devices=8)

@@ -1,0 +1,103 @@
+"""Recurrent sequence mixers: parallel/chunked forms vs stepwise recurrence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SSMConfig
+from repro.models.ssm import (
+    init_mamba,
+    init_mamba_state,
+    mamba_decode,
+    mamba_forward,
+)
+from repro.models.xlstm import (
+    init_mlstm,
+    init_mlstm_state,
+    init_slstm,
+    init_slstm_state,
+    mlstm_decode,
+    mlstm_forward,
+    slstm_decode,
+    slstm_forward,
+)
+
+B, S, D, H = 2, 16, 32, 4
+
+
+@pytest.fixture
+def x():
+    return jax.random.normal(jax.random.PRNGKey(0), (B, S, D)) * 0.5
+
+
+def test_mlstm_chunked_equals_recurrent(x):
+    p = init_mlstm(jax.random.PRNGKey(1), D, H)
+    out_c, st_c = mlstm_forward(p, x, H, chunk=4)
+    st = init_mlstm_state(B, 2 * D, H)
+    outs = []
+    for t in range(S):
+        o, st = mlstm_decode(p, x[:, t:t + 1], st, H)
+        outs.append(o)
+    out_n = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_n),
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_c["C"]), np.asarray(st["C"]),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_mlstm_chunk_size_invariance(x):
+    p = init_mlstm(jax.random.PRNGKey(1), D, H)
+    o1, _ = mlstm_forward(p, x, H, chunk=4)
+    o2, _ = mlstm_forward(p, x, H, chunk=8)
+    o3, _ = mlstm_forward(p, x, H, chunk=16)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o3), atol=2e-4)
+
+
+def test_slstm_scan_equals_stepwise(x):
+    p = init_slstm(jax.random.PRNGKey(2), D, H)
+    out_s, _ = slstm_forward(p, x)
+    st = init_slstm_state(B, D)
+    outs = []
+    for t in range(S):
+        o, st = slstm_decode(p, x[:, t:t + 1], st)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(out_s),
+                               np.asarray(jnp.concatenate(outs, 1)),
+                               atol=1e-5)
+
+
+def test_mamba_scan_equals_stepwise(x):
+    ssm = SSMConfig(state_dim=8, expand=2, conv_width=4)
+    p = init_mamba(jax.random.PRNGKey(3), D, ssm)
+    out_m, st_m = mamba_forward(p, x, ssm)
+    st = init_mamba_state(B, 2 * D, ssm)
+    outs = []
+    for t in range(S):
+        o, st = mamba_decode(p, x[:, t:t + 1], st, ssm)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(out_m),
+                               np.asarray(jnp.concatenate(outs, 1)),
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_m["h"]), np.asarray(st["h"]),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_mamba_causality(x):
+    ssm = SSMConfig(state_dim=8, expand=2, conv_width=4)
+    p = init_mamba(jax.random.PRNGKey(3), D, ssm)
+    y1, _ = mamba_forward(p, x, ssm)
+    x2 = x.at[:, S // 2:].add(10.0)
+    y2, _ = mamba_forward(p, x2, ssm)
+    np.testing.assert_allclose(np.asarray(y1[:, :S // 2]),
+                               np.asarray(y2[:, :S // 2]), atol=1e-5)
+
+
+def test_mlstm_state_continuation(x):
+    """forward(first half) state feeds forward(second half) == full forward."""
+    p = init_mlstm(jax.random.PRNGKey(1), D, H)
+    full, _ = mlstm_forward(p, x, H, chunk=4)
+    h1, st = mlstm_forward(p, x[:, :S // 2], H, chunk=4)
+    h2, _ = mlstm_forward(p, x[:, S // 2:], H, chunk=4, state=st)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([h1, h2], 1)),
+                               np.asarray(full), atol=2e-4)

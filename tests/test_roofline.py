@@ -1,0 +1,90 @@
+"""Roofline HLO-parser unit tests on synthetic + real compiled programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline import analysis as A
+
+
+SYNTH = """\
+HloModule test
+
+%region_0.2 (arg_tuple.1: (s32[], f32[128,128])) -> (s32[], f32[128,128]) {
+  %p = f32[128,128]{1,0} parameter(0)
+  %dot.1 = f32[128,128]{1,0} dot(%p, %p), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag.1 = f32[128,128]{1,0} all-gather(%p), replica_groups=[2,4]<=[8], dimensions={0}
+}
+
+ENTRY %main (x: f32[128,128]) -> f32[128,128] {
+  %x = f32[128,128]{1,0} parameter(0)
+  %while.5 = (s32[], f32[128,128]{1,0}) while(%x), condition=%c, body=%region_0.2, backend_config={"known_trip_count":{"n":"10"}}
+  %ar.1 = f32[64,64]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}
+}
+"""
+
+
+def test_shape_bytes():
+    assert A._shape_bytes("f32[128,128]") == 128 * 128 * 4
+    assert A._shape_bytes("bf16[2,4,8]") == 2 * 4 * 8 * 2
+    assert A._shape_bytes("(f32[4], bf16[8])") == 16 + 16
+    assert A._shape_bytes("pred[16]") == 16
+
+
+def test_synthetic_collectives_scaled_by_trip_count():
+    stats = A.parse_collectives(SYNTH, default_group=8)
+    # all-gather inside 10-trip loop: payload = 10 * 64KB
+    assert stats.counts["all-gather"] == 1
+    np.testing.assert_allclose(stats.payload_bytes["all-gather"],
+                               10 * 128 * 128 * 4)
+    # all-reduce outside loop, group of 4: wire factor 2*(3/4)
+    np.testing.assert_allclose(
+        stats.payload_bytes["all-reduce"], 64 * 64 * 4)
+    expected_wire = (10 * 128 * 128 * 4) * (3 / 4) + (64 * 64 * 4) * 1.5
+    np.testing.assert_allclose(stats.wire_bytes, expected_wire)
+
+
+def test_synthetic_dot_flops_scaled():
+    flops, _ = A.hlo_cost(SYNTH)
+    np.testing.assert_allclose(flops, 10 * 2 * 128 ** 3)
+
+
+def test_real_program_flops_match_known_matmul():
+    n, k, m = 64, 32, 48
+    c = jax.jit(lambda a, b: a @ b).lower(
+        jax.ShapeDtypeStruct((n, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, m), jnp.float32)).compile()
+    flops, bts = A.hlo_cost(c.as_text())
+    np.testing.assert_allclose(flops, 2 * n * k * m)
+    assert bts >= (n * k + k * m + n * m) * 4  # at least one pass of I/O
+
+
+def test_real_scan_trip_scaling():
+    L = 12
+    ws = jax.ShapeDtypeStruct((L, 64, 64), jnp.float32)
+    x0 = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def f(ws, x):
+        def body(c, w):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    c = jax.jit(f).lower(ws, x0).compile()
+    flops, _ = A.hlo_cost(c.as_text())
+    np.testing.assert_allclose(flops, L * 2 * 64 ** 3, rtol=0.01)
+
+
+def test_roofline_terms_and_bottleneck():
+    r = A.Roofline(flops=197e12, hbm_bytes=819e9 * 2, wire_bytes=0.0,
+                   chips=1, peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+    np.testing.assert_allclose(r.t_compute, 1.0)
+    np.testing.assert_allclose(r.t_memory, 2.0)
+    assert r.bottleneck == "memory"
+
+
+def test_model_flops():
+    from repro.configs.base import ShapeConfig
+    train = ShapeConfig("t", 1024, 8, "train")
+    dec = ShapeConfig("d", 1024, 8, "decode")
+    assert A.model_flops(train, 1e9) == 6e9 * 8 * 1024
+    assert A.model_flops(dec, 1e9) == 2e9 * 8
