@@ -1,0 +1,103 @@
+"""Fused flash-attention kernel A/B at Evoformer shapes.
+
+Three executions of the same gated-attention math
+(``softmax(scale*qk^T + bias + mask) @ v``):
+
+  fused         ops.fused_attention — online softmax over KV tiles, scores
+                never in HBM (this PR's kernel).
+  materialized  scores einsum -> fused-softmax kernel -> probs einsum (the
+                pre-kernel Evoformer path, kept behind REPRO_DISABLE_KERNELS).
+  chunked       paper-§V.C chunking technique: groups processed sequentially
+                via lax.map over the materialized path.
+
+For each shape: forward and forward+backward wall time, plus the modeled peak
+attention-transient bytes (repro.memory.autochunk.attention_transient_bytes)
+— the fused column scales with the KV tile, the materialized column with
+R^2. On CPU the Pallas kernel runs in interpret mode, so absolute times favor
+the XLA-fused materialized path; the TPU target is where the fwd+bwd win
+lands (the bytes columns are backend-independent).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, time_fn
+from repro.kernels import ops
+from repro.layers.attention import evoformer_attention
+from repro.memory.autochunk import attention_transient_bytes
+
+KV_TILE = 128
+
+
+def _inputs(g, h, s, d, dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (g, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (g, s, h, d), dtype)
+    v = jax.random.normal(ks[2], (g, s, h, d), dtype)
+    bias = jax.random.normal(ks[3], (1, h, s, s), dtype)
+    mask = jnp.where(jax.random.bernoulli(ks[4], 0.9, (g, s)), 0.0,
+                     -1e9).astype(jnp.float32)
+    return q, k, v, bias, mask
+
+
+def _materialized(q, k, v, bias, mask):
+    # The repo's actual scores-materialized baseline (same 1/sqrt(hd) scale
+    # and bias/mask contract as ops.fused_attention).
+    return evoformer_attention(q, k, v, bias=bias, mask=mask)
+
+
+def _chunked(q, k, v, bias, mask, chunk):
+    n = q.shape[0]
+    nc = n // chunk
+
+    def split(t):
+        return t.reshape((nc, chunk) + t.shape[1:])
+
+    out = jax.lax.map(
+        lambda args: _materialized(args[0], args[1], args[2], bias, args[3]),
+        (split(q), split(k), split(v), split(mask)))
+    return out.reshape(q.shape)
+
+
+def run():
+    for (g, h, s, d) in [(8, 4, 128, 32), (4, 4, 256, 32)]:
+        q, k, v, bias, mask = _inputs(g, h, s, d)
+        variants = {
+            "fused": jax.jit(functools.partial(
+                ops.fused_attention, kv_tile=KV_TILE)),
+            "materialized": jax.jit(_materialized),
+            "chunked": jax.jit(functools.partial(
+                _chunked, chunk=max(g // 4, 1))),
+        }
+        times = {}
+        for name, fn in variants.items():
+            if name == "fused":
+                f = lambda: fn(q, k, v, bias=bias, mask=mask)
+                gf = jax.jit(jax.grad(lambda q_, k_, v_: jnp.sum(
+                    fn(q_, k_, v_, bias=bias, mask=mask) ** 2),
+                    argnums=(0, 1, 2)))
+            else:
+                f = lambda: fn(q, k, v, bias, mask)
+                gf = jax.jit(jax.grad(lambda q_, k_, v_: jnp.sum(
+                    fn(q_, k_, v_, bias, mask) ** 2), argnums=(0, 1, 2)))
+            fused = name == "fused"
+            geff = max(g // 4, 1) if name == "chunked" else g
+            peak = attention_transient_bytes(
+                geff, h, s, d, kv_tile=KV_TILE if fused else 0, fused=fused,
+                dtype_bytes=4)
+            t_f = time_fn(lambda *_: f(), None, iters=5, warmup=2)
+            times[(name, "fwd")] = t_f
+            csv_row(f"attn_{name}_fwd_g{g}s{s}", t_f,
+                    f"peak_attn_bytes={peak}")
+            t_b = time_fn(lambda *_: gf(q, k, v), None, iters=5, warmup=2)
+            times[(name, "bwd")] = t_b
+            csv_row(f"attn_{name}_fwdbwd_g{g}s{s}", t_b,
+                    f"peak_attn_bytes={peak}")
+        ratio = times[("fused", "bwd")] / times[("materialized", "bwd")]
+        csv_row(f"attn_fused_vs_materialized_fwdbwd_g{g}s{s}", 0,
+                f"ratio={ratio:.2f}x (interpret-mode Pallas on CPU)")
+
+
+if __name__ == "__main__":
+    run()

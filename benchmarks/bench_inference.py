@@ -15,6 +15,7 @@ from repro.configs.alphafold import SMOKE
 from repro.core.alphafold import alphafold_forward, init_alphafold
 from repro.data import protein_batches
 from repro.launch.mesh import HBM_BYTES
+from repro.memory.autochunk import apply_plan, plan_evoformer_chunks
 
 
 def activation_bytes(n_res, n_seq=512, heads=4, d_pair=128, dap=1):
@@ -30,10 +31,18 @@ def run():
     params = init_alphafold(jax.random.PRNGKey(0), SMOKE)
     fwd = jax.jit(lambda p, b: alphafold_forward(p, b, SMOKE,
                                                  n_recycle=0)["coords"])
-    # paper-baseline chunking technique (§V.C): slower, lower peak memory
+    # paper-baseline chunking technique (§V.C) with AutoChunk choosing the
+    # chunk sizes: plan against an artificially tight budget (half the
+    # unchunked estimate) so the planner is forced to chunk — no hand-set
+    # constants.
+    free = plan_evoformer_chunks(SMOKE.evoformer, batch=1, n_seq=8, n_res=96,
+                                 budget_bytes=HBM_BYTES)
+    tight = plan_evoformer_chunks(SMOKE.evoformer, batch=1, n_seq=8, n_res=96,
+                                  budget_bytes=max(free.est_bytes // 2, 1))
+    csv_row("autochunk_plan_free", 0, free.describe())
+    csv_row("autochunk_plan_tight", 0, tight.describe())
     chunk_cfg = dataclasses.replace(
-        SMOKE, evoformer=dataclasses.replace(SMOKE.evoformer,
-                                             inference_chunk=4))
+        SMOKE, evoformer=apply_plan(SMOKE.evoformer, tight))
     fwd_chunk = jax.jit(lambda p, b: alphafold_forward(
         p, b, chunk_cfg, n_recycle=0)["coords"])
     for n_res in (16, 32, 64, 96):

@@ -3,6 +3,7 @@
 Prints ``name,us_per_call,derived`` CSV rows.
 
   bench_softmax       Fig. 8    fused softmax kernel
+  bench_attention     §III.B    fused flash attention vs scores-materialized
   bench_layernorm     Fig. 9    fused LayerNorm kernel
   bench_comm_volume   Table III DAP vs TP communication volume
   bench_mp_scaling    Fig. 10   model-parallel scaling (DAP vs TP), real devices
@@ -16,6 +17,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
+        bench_attention,
         bench_comm_volume,
         bench_dp_scaling,
         bench_duality,
@@ -26,9 +28,9 @@ def main() -> None:
     )
 
     print("name,us_per_call,derived")
-    for mod in (bench_softmax, bench_layernorm, bench_comm_volume,
-                bench_mp_scaling, bench_dp_scaling, bench_inference,
-                bench_duality):
+    for mod in (bench_softmax, bench_attention, bench_layernorm,
+                bench_comm_volume, bench_mp_scaling, bench_dp_scaling,
+                bench_inference, bench_duality):
         try:
             mod.run()
         except Exception as e:  # keep the harness going; failures are visible

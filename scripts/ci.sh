@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 CI: run the test suite twice — once with the Pallas kernels enabled
+# (fused flash-attention / softmax / LN / elementwise paths) and once with
+# REPRO_DISABLE_KERNELS=1 (pure-jnp oracle + scores-materialized attention).
+# Any divergence between a kernel and its oracle fails fast in the first leg;
+# the second leg proves the fallback/A-B path stays healthy on its own.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "=== tier-1 leg 1/2: Pallas kernels ENABLED ==="
+python -m pytest -x -q "$@"
+
+echo "=== tier-1 leg 2/2: kernels DISABLED (REPRO_DISABLE_KERNELS=1, oracle paths) ==="
+REPRO_DISABLE_KERNELS=1 python -m pytest -x -q "$@"
+
+echo "ci.sh: both legs green"

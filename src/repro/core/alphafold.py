@@ -1,7 +1,14 @@
 """End-to-end AlphaFold-2 model: embedders, recycling, Evoformer trunk (DAP-
-parallelizable), structure module, and training heads."""
+parallelizable), structure module, and training heads.
+
+Chunking: ``alphafold_forward`` resolves the Evoformer chunk knobs through the
+AutoChunk planner (repro.memory.autochunk) at trace time — the largest
+settings whose modeled activation memory fits the per-chip HBM budget, no
+chunking when everything fits. Hand-set nonzero knobs and
+``evoformer.auto_chunk=False`` opt out."""
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -22,6 +29,7 @@ from repro.core.structure import (
 )
 from repro.layers.norms import init_layer_norm, layer_norm
 from repro.layers.params import Params, dense, init_dense
+from repro.memory.autochunk import resolve_evoformer_config
 
 N_AA = 21
 RELPOS_K = 32
@@ -143,11 +151,23 @@ def alphafold_iteration(params, batch, prev, cfg: AlphaFoldConfig, *,
 
 def alphafold_forward(params, batch, cfg: AlphaFoldConfig, *,
                       n_recycle: int | jax.Array | None = None,
-                      dist=LocalDist(), rng=None, train=False):
+                      dist=LocalDist(), rng=None, train=False,
+                      hbm_budget: int | None = None):
     """Full forward with recycling. Pre-final iterations run under
     stop_gradient (AlphaFold training recipe); the number of recycles can be a
-    traced scalar (sampled per-batch during training, fixed 3 at inference)."""
+    traced scalar (sampled per-batch during training, fixed 3 at inference).
+
+    ``hbm_budget`` overrides the per-chip HBM budget the AutoChunk planner
+    resolves chunk knobs against (default: launch.mesh.HBM_BYTES)."""
     b, s, r = batch["msa"].shape
+    # AutoChunk (trace-time, static shapes): fill chunk knobs left at 0 from
+    # the HBM budget instead of hand-set constants.
+    budget_kw = {} if hbm_budget is None else {"budget_bytes": hbm_budget}
+    evo_cfg = resolve_evoformer_config(
+        cfg.evoformer, batch=b, n_seq=s, n_res=r,
+        dap=getattr(dist, "axis_size", 1), **budget_kw)
+    if evo_cfg is not cfg.evoformer:
+        cfg = dataclasses.replace(cfg, evoformer=evo_cfg)
     d_m, d_z = cfg.d_msa, cfg.d_pair
     if n_recycle is None:
         n_recycle = cfg.n_recycle

@@ -27,6 +27,15 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 
+def named_axis_size(axis: str) -> int:
+    """Static size of a named mapped axis, across jax versions: jax>=0.5 has
+    jax.lax.axis_size; 0.4.x exposes it via jax.core.axis_frame."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    frame = jax.core.axis_frame(axis)
+    return frame if isinstance(frame, int) else frame.size
+
+
 class LocalDist:
     """Identity backend (1 DAP device)."""
 
@@ -53,7 +62,7 @@ class ShardMapDist:
 
     @property
     def axis_size(self) -> int:
-        return jax.lax.axis_size(self.axis)
+        return named_axis_size(self.axis)
 
     def all_to_all(self, x, *, split_axis: int, concat_axis: int):
         # Swap which axis is sharded: locally split `split_axis`, concat shards

@@ -14,10 +14,21 @@ paper Fig. 6:
   AllGather materializes cross-axis operands: OPM right projection, triangular
   left/right projections, and the (H, r, r) attention bias tensors.
 
-Kernel usage (paper §IV.A): all softmaxes go through the fused
-scale+bias+mask+softmax Pallas kernel; all LayerNorms through the fused LN
-kernel; gating through bias+sigmoid+mul; residual adds through
-bias+dropout+add. QKV and left/right projections use merged GEMMs.
+Kernel usage (paper §IV.A + ScaleFold's fused-attention extension): all four
+attention sites (MSA row, MSA col, triangle start/end) go through the
+flash-style fused gated-attention Pallas kernel (``ops.fused_attention``) —
+online softmax over KV tiles, so the (B, G, H, R, R) scores tensor never
+reaches HBM; with ``REPRO_DISABLE_KERNELS=1`` (or out-of-envelope shapes)
+they fall back to the scores-materialized path with the fused
+scale+bias+mask+softmax kernel, kept for A/B and for the GSPMD production
+dry-run. All LayerNorms go through the fused LN kernel; gating through
+bias+sigmoid+mul; residual adds through bias+dropout+add with the AlphaFold
+shared-axis dropout mask. QKV and left/right projections use merged GEMMs.
+
+Chunk knobs (``inference_chunk``, ``opm_chunk``, ``attn_kv_tile``) default to
+0 = off/kernel-default; the AutoChunk planner (repro.memory.autochunk) fills
+them from the HBM budget at the alphafold_forward level instead of hand-set
+constants.
 """
 from __future__ import annotations
 
@@ -65,6 +76,15 @@ class EvoformerConfig:
     # paper's point (Figs 12-13, Table V) is that DAP beats this; we implement
     # both so the comparison is ours to measure.
     inference_chunk: int = 0
+    # KV tile for the fused flash-attention kernel (and its backward
+    # recompute block). 0 = kernel default (512). Bounds the per-tile
+    # attention transient at (B, G, H, r, kv_tile) instead of r^2.
+    attn_kv_tile: int = 0
+    # Let the AutoChunk planner (repro.memory.autochunk) fill any chunk knob
+    # left at 0 from the HBM budget — resolved once per forward at the
+    # alphafold_forward level (trace-time, static shapes). Hand-set nonzero
+    # knobs are always respected.
+    auto_chunk: bool = True
 
 
 # ---------------------------------------------------------------------------
@@ -131,46 +151,68 @@ def init_evoformer_block(key, cfg: EvoformerConfig) -> Params:
 # Helpers
 # ---------------------------------------------------------------------------
 
-def shared_dropout(x, rate: float, rng, shared_axis: int, train: bool):
-    """Dropout with the mask shared along one axis (AlphaFold row/col dropout).
-
-    Under shard_map the mask is shared within the local shard when the shared
-    axis is the sharded one (stochastic-regularization-equivalent; exact
-    equivalence across dist modes is tested with dropout disabled)."""
-    if not train or rate == 0.0 or rng is None:
-        return x
-    shape = list(x.shape)
-    shape[shared_axis] = 1
-    keep = jax.random.bernoulli(rng, 1.0 - rate, shape)
-    return jnp.where(keep, x / (1.0 - rate), 0.0).astype(x.dtype)
+def _residual_add(upd, residual, rate: float, rng, shared_axis: int,
+                  train: bool):
+    """AlphaFold shared-axis residual add: residual + dropout(upd) with one
+    Bernoulli draw broadcast along ``shared_axis`` (row/column dropout),
+    fused into the bias+dropout+add kernel in one HBM pass (paper §IV.A.1
+    "JIT Fusion" residual chain). Under shard_map the mask is shared within
+    the local shard when the shared axis is the sharded one
+    (stochastic-regularization-equivalent; exact equivalence across dist
+    modes is tested with dropout disabled)."""
+    use_dropout = train and rate > 0.0 and rng is not None
+    return ops.bias_dropout_add(
+        upd, None, residual,
+        rate=rate if use_dropout else 0.0,
+        rng=rng if use_dropout else None,
+        shared_axes=(shared_axis,),
+    )
 
 
 def _gated_attention(p_attn, x_n, bias, key_mask, dims: AttnDims,
-                     dist=LocalDist(), chunk: int = 0):
+                     dist=LocalDist(), chunk: int = 0, kv_tile: int = 0):
     """Group attention, kept 5D so (batch, group) dims never merge — merging
     two mesh-sharded dims would force an all-gather under GSPMD.
 
     x_n: (B, G, S, d); bias (B, H, S, S) shared across G, or None;
     key_mask (B, G, S) in {0,1}, or None. The G (group) dim carries the DAP
-    shard; the scores/probs constraints below pin it through the backward
-    recompute regions, where plain propagation loses it.
+    shard; the q/ctx (fused path) or scores/probs (fallback) constraints pin
+    it through the backward recompute regions, where plain propagation loses
+    it.
+
+    Fused path (default): ops.fused_attention — online softmax over
+    ``kv_tile``-wide KV tiles, scores never materialized in HBM. With
+    REPRO_DISABLE_KERNELS=1 or out-of-envelope shapes, the scores-
+    materialized path below runs instead (A/B baseline and the GSPMD
+    production dry-run, where XLA owns the fusion).
 
     chunk > 0: the paper-§V.C chunking technique — G processed in sequential
-    chunks, capping the scores transient at (B, chunk, H, S, S). Inference
+    chunks, capping the attention transient at (B, chunk, H, S, *). Inference
     fallback only (trades latency for memory; DAP is the scalable answer).
     """
     def attend(x_c, mask_c):
         q, k, v = project_qkv(p_attn, x_c, dims, compute_dtype=x_c.dtype)
         hd = q.shape[-1]
-        scores = jnp.einsum("bgihd,bgjhd->bghij", q, k)
-        scores = dist.constrain(scores, ("b", "m", None, None, None))
+        scale = 1.0 / (hd**0.5)
         mask = None
         if mask_c is not None:
             mask = jnp.where(mask_c > 0, 0.0, NEG_INF).astype(jnp.float32)
-        probs = ops.fused_softmax(scores, bias=bias, mask=mask,
-                                  scale=1.0 / (hd**0.5))
-        probs = dist.constrain(probs, ("b", "m", None, None, None))
-        ctx = jnp.einsum("bghij,bgjhd->bgihd", probs, v)
+        if ops.fused_attention_supported(q.shape, kv_len=k.shape[2],
+                                         dtype=q.dtype):
+            spec = ("b", "m", None, None, None)
+            q = dist.constrain(q, spec)
+            k = dist.constrain(k, spec)
+            v = dist.constrain(v, spec)
+            ctx = ops.fused_attention(q, k, v, bias=bias, mask=mask,
+                                      scale=scale, kv_tile=kv_tile)
+            ctx = dist.constrain(ctx, spec)
+        else:
+            scores = jnp.einsum("bgihd,bgjhd->bghij", q, k)
+            scores = dist.constrain(scores, ("b", "m", None, None, None))
+            probs = ops.fused_softmax(scores, bias=bias, mask=mask,
+                                      scale=scale)
+            probs = dist.constrain(probs, ("b", "m", None, None, None))
+            ctx = jnp.einsum("bghij,bgjhd->bgihd", probs, v)
         return output_proj(p_attn, ctx, x_for_gate=x_c)
 
     g = x_n.shape[1]
@@ -209,7 +251,8 @@ def msa_row_attention(p, msa, pair, seq_mask, dist, cfg: EvoformerConfig):
     m_n = layer_norm(p["ln_m"], msa)
     key_mask = jnp.broadcast_to(seq_mask[:, None, :], (b, s_loc, r))
     return _gated_attention(p["attn"], m_n, bias, key_mask, dims,
-                            dist=dist, chunk=cfg.inference_chunk)
+                            dist=dist, chunk=cfg.inference_chunk,
+                            kv_tile=cfg.attn_kv_tile)
 
 
 def msa_col_attention(p, msa, msa_mask, dist, cfg: EvoformerConfig):
@@ -220,7 +263,8 @@ def msa_col_attention(p, msa, msa_mask, dist, cfg: EvoformerConfig):
     x = m_n.transpose(0, 2, 1, 3)                  # (B, r/N, s, d)
     key_mask = msa_mask.transpose(0, 2, 1)         # (B, r/N, s)
     out = _gated_attention(p["attn"], x, None, key_mask, dims,
-                           dist=dist, chunk=cfg.inference_chunk)
+                           dist=dist, chunk=cfg.inference_chunk,
+                           kv_tile=cfg.attn_kv_tile)
     return out.transpose(0, 2, 1, 3)
 
 
@@ -326,7 +370,8 @@ def triangle_attention(p, pair, seq_mask, dist, cfg: EvoformerConfig):
     bias = dist.constrain(bias, ("b", None, None, None))
     key_mask = jnp.broadcast_to(seq_mask[:, None, :], (b, i_loc, r))
     return _gated_attention(p["attn"], z_n, bias, key_mask, dims,
-                            dist=dist, chunk=cfg.inference_chunk)
+                            dist=dist, chunk=cfg.inference_chunk,
+                            kv_tile=cfg.attn_kv_tile)
 
 
 def transpose_pair(x, dist):
@@ -363,17 +408,17 @@ def evoformer_block(
     msa = dist.constrain(msa, ("b", "m", None, None))
     pair = dist.constrain(pair, ("b", "m", None, None))
     upd = msa_row_attention(params["msa_row"], msa, pair, seq_mask, dist, cfg)
-    upd = shared_dropout(upd, cfg.dropout_msa, rngs[0], 2, train)
-    msa = msa + upd
+    msa = _residual_add(upd, msa, cfg.dropout_msa, rngs[0], 2, train)
 
     # all_to_all #1: s-shard -> r-shard.
     msa = dist.all_to_all(msa, split_axis=2, concat_axis=1)
     msa = dist.constrain(msa, ("b", None, "m", None))
     msa_mask_r = dist.all_to_all(msa_mask, split_axis=2, concat_axis=1)
 
-    msa = msa + msa_col_attention(params["msa_col"], msa, msa_mask_r,
-                                  dist, cfg)
-    msa = msa + msa_transition(params["msa_trans"], msa)
+    upd = msa_col_attention(params["msa_col"], msa, msa_mask_r, dist, cfg)
+    msa = _residual_add(upd, msa, 0.0, None, 0, train)
+    msa = _residual_add(msa_transition(params["msa_trans"], msa), msa,
+                        0.0, None, 0, train)
 
     # ----- Communication: OPM consumes the r-shard MSA -----
     pair_upd = outer_product_mean(params["opm"], msa, msa_mask_r, dist, cfg)
@@ -384,30 +429,32 @@ def evoformer_block(
     msa = dist.all_to_all(msa, split_axis=1, concat_axis=2)
     msa = dist.constrain(msa, ("b", "m", None, None))
 
-    pair = pair + shared_dropout(pair_upd, cfg.dropout_pair, rngs[1], 1, train)
+    pair = _residual_add(pair_upd, pair, cfg.dropout_pair, rngs[1], 1, train)
 
     # ----- Pair stack (i-shard phase) -----
     upd = triangle_mult_outgoing(params["tri_mult_out"], pair, pair_mask_loc,
                                  dist, cfg)
-    pair = pair + shared_dropout(upd, cfg.dropout_pair, rngs[2], 1, train)
+    pair = _residual_add(upd, pair, cfg.dropout_pair, rngs[2], 1, train)
 
     pair_t = transpose_pair(pair, dist)
     pair_mask_t = transpose_pair(pair_mask_loc[..., None], dist)[..., 0]
     upd = triangle_mult_incoming(params["tri_mult_in"], pair, pair_t,
                                  pair_mask_t, dist, cfg)
-    pair = pair + shared_dropout(upd, cfg.dropout_pair, rngs[3], 1, train)
+    pair = _residual_add(upd, pair, cfg.dropout_pair, rngs[3], 1, train)
 
     upd = triangle_attention(params["tri_attn_start"], pair, seq_mask, dist, cfg)
-    pair = pair + shared_dropout(upd, cfg.dropout_pair, rngs[4], 1, train)
+    pair = _residual_add(upd, pair, cfg.dropout_pair, rngs[4], 1, train)
 
     # Ending-node attention == starting-node attention on the transpose.
     pair_t = transpose_pair(pair, dist)
     upd_t = triangle_attention(params["tri_attn_end"], pair_t, seq_mask, dist, cfg)
     upd = transpose_pair(upd_t, dist)
-    pair = pair + shared_dropout(upd, cfg.dropout_pair, rngs[5], 2, train)
+    pair = _residual_add(upd, pair, cfg.dropout_pair, rngs[5], 2, train)
 
-    pair = pair + transition(params["pair_trans"]["mlp"],
-                             layer_norm(params["pair_trans"]["ln"], pair))
+    pair = _residual_add(
+        transition(params["pair_trans"]["mlp"],
+                   layer_norm(params["pair_trans"]["ln"], pair)),
+        pair, 0.0, None, 0, train)
     return msa, pair
 
 

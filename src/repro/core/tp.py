@@ -22,7 +22,7 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core import evoformer as evo
-from repro.core.dist import LocalDist, batch_spec
+from repro.core.dist import LocalDist, batch_spec, named_axis_size
 from repro.kernels import ops
 from repro.layers.attention import evoformer_attention
 from repro.layers.norms import layer_norm
@@ -57,7 +57,7 @@ def _slice_vec(b, idx, n, groups: int = 1):
 def tp_gated_attention(p_attn, x_n, bias, key_mask, heads, head_dim, axis):
     """Column-parallel QKV/gate, row-parallel output + AllReduce."""
     idx = jax.lax.axis_index(axis)
-    n = jax.lax.axis_size(axis)
+    n = named_axis_size(axis)
     h_loc = heads // n
     dt = x_n.dtype
 
@@ -97,7 +97,7 @@ def tp_gated_attention(p_attn, x_n, bias, key_mask, heads, head_dim, axis):
 def tp_transition(p, x, axis):
     """Column-parallel first linear, row-parallel second + AllReduce."""
     idx = jax.lax.axis_index(axis)
-    n = jax.lax.axis_size(axis)
+    n = named_axis_size(axis)
     x_n = layer_norm(p["ln"], x)
     dt = x_n.dtype
     wi = _slice_cols(p["mlp"]["wi"]["w"], idx, n).astype(dt)

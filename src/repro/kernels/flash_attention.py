@@ -1,0 +1,177 @@
+"""Fused flash-style gated-attention forward Pallas TPU kernel.
+
+Computes ``out = softmax(scale * q @ k^T + bias + mask) @ v`` with an online
+softmax over KV tiles: the scores tile lives only in VMEM, so the
+``(N, H, R, R)`` scores tensor the paper's §III.B identifies as the cubic
+``N_r^3 * H`` memory transient never reaches HBM. HBM traffic per q tile is
+linear in the KV tile size instead of quadratic in sequence length — the
+fused-attention gap ScaleFold (arXiv 2404.11068) closes on top of FastFold's
+kernel set.
+
+Kernel contract (enforced/prepared by ops.fused_attention):
+
+  q, k, v : (N, H, S, D) with D already zero-padded to a 128-lane multiple
+            and S padded to the q/kv tile (zero rows — harmless: they attend
+            over the real KV range and are sliced off by the caller).
+  bias    : (B, H, Sq, Skv) additive, ``N % B == 0`` (each bias batch element
+            is shared by N/B consecutive rows of q — the Evoformer pair bias
+            shared across the MSA/group axis), or None.
+  mask    : (N, Skv) additive fp32 (0 / NEG_INF-style), or None. Mask values
+            must be finite (use ~-1e9, not -inf).
+  kv_len  : true KV length before padding; padded columns are masked to
+            ``NEG_INF`` in-kernel so they never win the max nor add to the sum.
+
+Returns ``out (N, H, Sq, D)`` in the input dtype and the fp32 log-sum-exp
+``lse (N, H, Sq)`` that the recompute backward in ops.py needs.
+
+Grid: ``(N, H, Sq/q_tile, Skv/kv_tile)`` with KV innermost. The fp32 running
+(m, l, acc) state lives in VMEM scratch across the KV sweep; the output block
+is written once on the final KV step (Pallas revisiting semantics keep the
+block resident until its index changes). fp32 statistics, MXU GEMMs with
+fp32 accumulation (``preferred_element_type``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128
+NEG_INF = -1e30  # finite: keeps exp(s - m) NaN-free even for all-masked rows
+
+
+def _pad_to(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def _flash_kernel(*refs, scale: float, kv_len: int, kv_tile: int,
+                  has_bias: bool, has_mask: bool):
+    idx = 0
+    q_ref = refs[idx]; idx += 1
+    k_ref = refs[idx]; idx += 1
+    v_ref = refs[idx]; idx += 1
+    b_ref = refs[idx] if has_bias else None
+    idx += int(has_bias)
+    mk_ref = refs[idx] if has_mask else None
+    idx += int(has_mask)
+    o_ref, lse_ref = refs[idx], refs[idx + 1]
+    acc_ref, m_ref, l_ref = refs[idx + 2], refs[idx + 3], refs[idx + 4]
+
+    jk = pl.program_id(3)
+    n_kv = pl.num_programs(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                   # (q_tile, d_pad)
+    k = k_ref[0, 0]                                   # (kv_tile, d_pad)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                         # (q_tile, kv_tile)
+    if b_ref is not None:
+        s = s + b_ref[0, 0].astype(jnp.float32)
+    if mk_ref is not None:
+        s = s + mk_ref[0].astype(jnp.float32)[None, :]
+    # Neutralize KV padding: padded columns must not win the max nor
+    # contribute to the sum.
+    col = jk * kv_tile + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(col < kv_len, s, NEG_INF)
+
+    m_prev = m_ref[:, :1]                             # (q_tile, 1)
+    l_prev = l_ref[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0, 0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(jk == n_kv - 1)
+    def _epilogue():
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        lse_ref[0, 0, :] = (m_ref[:, :1] + jnp.log(l))[:, 0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "kv_len", "q_tile", "kv_tile", "has_bias",
+                     "has_mask", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    bias: jax.Array | None = None,
+    mask: jax.Array | None = None,
+    *,
+    scale: float,
+    kv_len: int,
+    q_tile: int,
+    kv_tile: int,
+    has_bias: bool = False,
+    has_mask: bool = False,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Pre-padded inputs only — see module docstring; use ops.fused_attention."""
+    n, h, sq, d = q.shape
+    skv = k.shape[2]
+    assert sq % q_tile == 0 and skv % kv_tile == 0 and d % LANE == 0, \
+        (q.shape, k.shape, q_tile, kv_tile)
+    grid = (n, h, sq // q_tile, skv // kv_tile)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, q_tile, d), lambda i, j, iq, jk: (i, j, iq, 0)),
+        pl.BlockSpec((1, 1, kv_tile, d), lambda i, j, iq, jk: (i, j, jk, 0)),
+        pl.BlockSpec((1, 1, kv_tile, d), lambda i, j, iq, jk: (i, j, jk, 0)),
+    ]
+    operands = [q, k, v]
+    if has_bias:
+        assert bias is not None and bias.ndim == 4 and n % bias.shape[0] == 0
+        rep = n // bias.shape[0]
+        in_specs.append(
+            pl.BlockSpec((1, 1, q_tile, kv_tile),
+                         lambda i, j, iq, jk: (i // rep, j, iq, jk))
+        )
+        operands.append(bias)
+    if has_mask:
+        assert mask is not None and mask.shape == (n, skv)
+        in_specs.append(
+            pl.BlockSpec((1, kv_tile), lambda i, j, iq, jk: (i, jk))
+        )
+        operands.append(mask)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, kv_len=kv_len, kv_tile=kv_tile,
+        has_bias=has_bias, has_mask=has_mask,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, q_tile, d), lambda i, j, iq, jk: (i, j, iq, 0)),
+            pl.BlockSpec((1, 1, q_tile), lambda i, j, iq, jk: (i, j, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct((n, h, sq), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((q_tile, d), jnp.float32),      # acc
+            pltpu.VMEM((q_tile, LANE), jnp.float32),   # running max m
+            pltpu.VMEM((q_tile, LANE), jnp.float32),   # running sum l
+        ],
+        interpret=interpret,
+    )(*operands)

@@ -135,6 +135,233 @@ def fused_softmax(
 
 
 # ---------------------------------------------------------------------------
+# fused flash attention (online softmax over KV tiles; scores never in HBM)
+# ---------------------------------------------------------------------------
+
+# Envelope: head dim beyond 256 blows the (kv_tile, d_pad) VMEM working set;
+# KV lengths beyond 16k belong to the decoder-LM blockwise path instead.
+_MAX_ATTN_D = 256
+_MAX_ATTN_S = 16384
+_DEFAULT_KV_TILE = 512   # forward KV tile / backward recompute block default
+
+
+def fused_attention_supported(q_shape, kv_len: int | None = None,
+                              dtype=None) -> bool:
+    """True when ops.fused_attention will take the Pallas flash path for this
+    shape — callers keeping a scores-materialized A/B path (evoformer's
+    ``REPRO_DISABLE_KERNELS`` toggle) branch on this. q_shape is the 4D
+    (N, Sq, H, D) or 5D (B, G, S, H, D) query shape."""
+    if not KERNELS_ENABLED:
+        return False
+    if dtype is not None and jnp.dtype(dtype) not in (
+            jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16)):
+        return False
+    d = q_shape[-1]
+    skv = q_shape[-3] if kv_len is None else kv_len
+    return d <= _MAX_ATTN_D and skv <= _MAX_ATTN_S
+
+
+def _attn_tiles(sq: int, skv: int, d: int, kv_tile: int):
+    from repro.kernels.flash_attention import LANE, _pad_to
+
+    d_pad = _pad_to(d, LANE)
+    # 16-row q tiles: bf16's min sublane tile (f32 needs 8; 16 covers both).
+    q_tile = min(128, _pad_to(sq, 16))
+    kv = kv_tile or _DEFAULT_KV_TILE
+    kv = min(_pad_to(kv, LANE), _pad_to(skv, LANE))
+    return q_tile, kv, d_pad
+
+
+def _attn_fwd_impl(scale, has_bias, has_mask, kv_tile, q, k, v, bias, mask):
+    """Returns (out (N, Sq, H, D), lse (N, H, Sq))."""
+    n, sq, h, d = q.shape
+    skv = k.shape[1]
+    bias = bias if has_bias else None
+    mask = mask if has_mask else None
+    if not fused_attention_supported(q.shape, kv_len=skv, dtype=q.dtype):
+        return ref.attention_ref(q, k, v, bias, mask, scale)
+    from repro.kernels.flash_attention import _pad_to, flash_attention_pallas
+
+    q_tile, kv_t, d_pad = _attn_tiles(sq, skv, d, kv_tile)
+    sq_pad = _pad_to(sq, q_tile)
+    skv_pad = _pad_to(skv, kv_t)
+
+    def pad4(x, s_to):  # (N, H, S, D) -> padded S/D
+        _, _, s, dd = x.shape
+        if s == s_to and dd == d_pad:
+            return x
+        return jnp.pad(x, ((0, 0), (0, 0), (0, s_to - s), (0, d_pad - dd)))
+
+    qt = pad4(q.transpose(0, 2, 1, 3), sq_pad)
+    kt = pad4(k.transpose(0, 2, 1, 3), skv_pad)
+    vt = pad4(v.transpose(0, 2, 1, 3), skv_pad)
+    bt = None
+    if bias is not None:
+        bt = jnp.pad(bias, ((0, 0), (0, 0), (0, sq_pad - sq),
+                            (0, skv_pad - skv)))
+    mt = None
+    if mask is not None:
+        mt = jnp.pad(mask, ((0, 0), (0, skv_pad - skv)))
+    out, lse = flash_attention_pallas(
+        qt, kt, vt, bt, mt, scale=scale, kv_len=skv, q_tile=q_tile,
+        kv_tile=kv_t, has_bias=bias is not None, has_mask=mask is not None,
+        interpret=_interpret(),
+    )
+    return out[:, :, :sq, :d].transpose(0, 2, 1, 3), lse[:, :, :sq]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _attn_op(scale, has_bias, has_mask, kv_tile, q, k, v, bias, mask):
+    out, _ = _attn_fwd_impl(scale, has_bias, has_mask, kv_tile, q, k, v,
+                            bias, mask)
+    return out
+
+
+def _attn_fwd(scale, has_bias, has_mask, kv_tile, q, k, v, bias, mask):
+    out, lse = _attn_fwd_impl(scale, has_bias, has_mask, kv_tile, q, k, v,
+                              bias, mask)
+    # Flash recompute residuals: only (q, k, v, out, lse) + the (already
+    # HBM-resident) bias/mask inputs — never the (N, H, Sq, Skv) probs.
+    return out, (q, k, v, bias, mask, out, lse)
+
+
+def _attn_bwd(scale, has_bias, has_mask, kv_tile, res, g):
+    """Recompute backward: scan over KV blocks, rebuilding the probs block
+    from (q, k, lse) — peak transient is (N, H, Sq, kv_block), never the full
+    scores tensor (mirrors layers/attention._flash_bwd, plus bias/mask)."""
+    q, k, v, bias, mask, out, lse = res
+    n, sq, h, d = q.shape
+    skv = k.shape[1]
+    kvb = min(kv_tile or _DEFAULT_KV_TILE, skv)
+    nkv = -(-skv // kvb)
+    skv_pad = nkv * kvb
+    neg = jnp.float32(-1e30)
+
+    kp = jnp.pad(k, ((0, 0), (0, skv_pad - skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, skv_pad - skv), (0, 0), (0, 0)))
+    # Combined additive mask: user mask (if any) + NEG_INF on padded columns
+    # so recomputed p is exactly zero there.
+    mcomb = None
+    if has_mask:
+        mcomb = jnp.pad(mask.astype(jnp.float32),
+                        ((0, 0), (0, skv_pad - skv)), constant_values=neg)
+    elif skv_pad != skv:
+        col = jnp.arange(skv_pad)
+        mcomb = jnp.broadcast_to(
+            jnp.where(col < skv, 0.0, neg)[None, :], (n, skv_pad))
+
+    xs = {
+        "k": kp.reshape(n, nkv, kvb, h, d).swapaxes(0, 1),
+        "v": vp.reshape(n, nkv, kvb, h, v.shape[-1]).swapaxes(0, 1),
+    }
+    if has_bias:
+        nb = bias.shape[0]
+        bp = jnp.pad(bias, ((0, 0), (0, 0), (0, 0), (0, skv_pad - skv)))
+        xs["b"] = bp.reshape(nb, h, sq, nkv, kvb).transpose(3, 0, 1, 2, 4)
+    if mcomb is not None:
+        xs["m"] = mcomb.reshape(n, nkv, kvb).swapaxes(0, 1)
+
+    gf = g.astype(jnp.float32)
+    delta = jnp.einsum("nqhd,nqhd->nhq", gf, out.astype(jnp.float32))
+
+    def kv_step(dq, blk):
+        k_j, v_j = blk["k"], blk["v"]
+        s = jnp.einsum("nqhd,nkhd->nhqk", q, k_j,
+                       preferred_element_type=jnp.float32) * scale
+        if "b" in blk:
+            nb = blk["b"].shape[0]
+            s = s.reshape((nb, n // nb) + s.shape[1:])
+            s = s + blk["b"].astype(jnp.float32)[:, None]
+            s = s.reshape((n,) + s.shape[2:])
+        if "m" in blk:
+            s = s + blk["m"][:, None, None, :]
+        p = jnp.exp(s - lse[..., None])                    # (N, H, Sq, kvb)
+        dv_j = jnp.einsum("nhqk,nqhd->nkhd", p, gf)
+        dp = jnp.einsum("nqhd,nkhd->nhqk", gf, v_j.astype(jnp.float32))
+        ds = p * (dp - delta[..., None])                   # d(logits)
+        dq = dq + jnp.einsum("nhqk,nkhd->nqhd", ds,
+                             k_j.astype(jnp.float32)) * scale
+        dk_j = jnp.einsum("nhqk,nqhd->nkhd", ds,
+                          q.astype(jnp.float32)) * scale
+        ys = {"dk": dk_j, "dv": dv_j}
+        if has_bias:
+            nb = bias.shape[0]
+            ys["db"] = ds.reshape((nb, n // nb) + ds.shape[1:]).sum(axis=1)
+        if has_mask:
+            ys["dm"] = ds.sum(axis=(1, 2))
+        return dq, ys
+
+    dq0 = jnp.zeros((n, sq, h, d), jnp.float32)
+    dq, ys = jax.lax.scan(kv_step, dq0, xs)
+    dk = ys["dk"].swapaxes(0, 1).reshape(n, skv_pad, h, d)[:, :skv]
+    dv = ys["dv"].swapaxes(0, 1).reshape(n, skv_pad, h, v.shape[-1])[:, :skv]
+    dbias = None
+    if has_bias:
+        dbias = (ys["db"].transpose(1, 2, 3, 0, 4)
+                 .reshape(bias.shape[0], h, sq, skv_pad)[..., :skv]
+                 .astype(bias.dtype))
+    dmask = None
+    if has_mask:
+        dmask = (ys["dm"].swapaxes(0, 1).reshape(n, skv_pad)[:, :skv]
+                 .astype(mask.dtype))
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            dbias, dmask)
+
+
+_attn_op.defvjp(_attn_fwd, _attn_bwd)
+
+
+def fused_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    bias: jax.Array | None = None,
+    mask: jax.Array | None = None,
+    scale: float | None = None,
+    kv_tile: int = 0,
+) -> jax.Array:
+    """Flash-style fused gated attention: softmax(scale*qk^T + bias + mask)@v
+    with online softmax over KV tiles — the scores tensor never reaches HBM.
+
+    4D form: q (N, Sq, H, D); k, v (N, Skv, H, D); bias (B, H, Sq, Skv) with
+        N % B == 0 (or (H, Sq, Skv) as B=1); mask (N, Skv) additive fp32.
+    5D form (Evoformer group attention): q, k, v (B, G, S, H, D) with bias
+        (B, H, S, S) shared across G and mask (B, G, S) additive. The (B, G)
+        dims are flattened for the kernel; callers under GSPMD should prefer
+        the scores-materialized path when kernels are disabled (see
+        fused_attention_supported / evoformer._gated_attention).
+
+    ``scale`` defaults to 1/sqrt(D). ``kv_tile`` (0 = default 512) bounds both
+    the forward KV tile and the backward recompute block — AutoChunk
+    (repro.memory.autochunk) plans it from the HBM budget.
+
+    custom_vjp: forward saves only (q, k, v, out, lse); backward recomputes
+    the probs per KV block. Mask values must be finite (~-1e9, not -inf).
+    Out-of-envelope shapes and REPRO_DISABLE_KERNELS=1 fall back to the
+    scores-materialized oracle (ref.attention_ref) under the same VJP.
+    """
+    d = q.shape[-1]
+    assert k.shape[-1] == d and v.shape[-1] == d, (q.shape, k.shape, v.shape)
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    if q.ndim == 5:
+        b, grp, sq, h, _ = q.shape
+        skv = k.shape[2]
+        qf = q.reshape(b * grp, sq, h, d)
+        kf = k.reshape(b * grp, skv, h, d)
+        vf = v.reshape(b * grp, skv, h, d)
+        mb = mask.reshape(b * grp, skv) if mask is not None else None
+        out = _attn_op(scale, bias is not None, mask is not None, kv_tile,
+                       qf, kf, vf, bias, mb)
+        return out.reshape(q.shape)
+    if bias is not None and bias.ndim == 3:
+        bias = bias[None]
+    return _attn_op(scale, bias is not None, mask is not None, kv_tile,
+                    q, k, v, bias, mask)
+
+
+# ---------------------------------------------------------------------------
 # layer norm
 # ---------------------------------------------------------------------------
 
@@ -266,20 +493,49 @@ _bda_op.defvjp(_bda_fwd, _bda_bwd)
 
 def bias_dropout_add(
     x: jax.Array,
-    b: jax.Array,
+    b: jax.Array | None,
     residual: jax.Array,
     rate: float = 0.0,
     rng: jax.Array | None = None,
+    shared_axes: tuple[int, ...] = (),
 ) -> jax.Array:
-    """residual + dropout(x + b, rate); rng=None or rate=0 disables dropout."""
+    """residual + dropout(x + b, rate); rng=None or rate=0 disables dropout.
+
+    ``b=None`` means no bias term (the Evoformer residual adds — the update's
+    output projection already carries its bias).
+
+    ``shared_axes``: axes of ``x`` along which the dropout mask is SHARED
+    (AlphaFold row/column dropout: one Bernoulli draw at the reduced shape,
+    broadcast along the named axes). The scale/mask/add still run in one
+    fused HBM pass.
+    """
     c = x.shape[-1]
+    if b is None and (rng is None or rate == 0.0):
+        # Pure residual add: no bias operand, no dropout mask. XLA fuses the
+        # fp32-accumulate add chain into one HBM pass on its own; running the
+        # kernel here would stream an all-ones keep mask and a zero bias for
+        # nothing. Same math as the kernel epilogue (fp32 add, cast back).
+        return (x.astype(jnp.float32)
+                + residual.astype(jnp.float32)).astype(residual.dtype)
+    keep_full = None
+    eff_rate = 0.0
+    if rng is not None and rate > 0.0:
+        shape = list(x.shape)
+        for ax in shared_axes:
+            shape[ax] = 1
+        keep_full = jnp.broadcast_to(
+            jax.random.bernoulli(rng, 1.0 - rate, tuple(shape)), x.shape
+        ).astype(jnp.float32)
+        eff_rate = rate
+    if b is None:
+        b = jnp.zeros((c,), x.dtype)
+    if not KERNELS_ENABLED or c > _MAX_NORM_C:
+        # Oracle path without flattening: reshaping (B, G, ...) to rows would
+        # merge mesh-sharded dims under GSPMD (same note as fused_softmax 5D).
+        return ref.bias_dropout_add_ref(x, b, residual, keep_full, eff_rate)
     xb = x.reshape((-1, c))
     rb = residual.reshape((-1, c))
-    if rng is not None and rate > 0.0:
-        keep = jax.random.bernoulli(rng, 1.0 - rate, xb.shape).astype(jnp.float32)
-        eff_rate = rate
-    else:
-        keep = jnp.ones_like(xb, dtype=jnp.float32)
-        eff_rate = 0.0
+    keep = (keep_full.reshape((-1, c)) if keep_full is not None
+            else jnp.ones_like(xb, dtype=jnp.float32))
     out = _bda_op(eff_rate, xb, b, rb, keep)
     return out.reshape(residual.shape)

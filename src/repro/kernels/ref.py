@@ -39,6 +39,48 @@ def softmax_ref(
     return out.astype(x.dtype)
 
 
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    bias: jax.Array | None = None,
+    mask: jax.Array | None = None,
+    scale: float = 1.0,
+) -> tuple[jax.Array, jax.Array]:
+    """Scores-materialized oracle for ops.fused_attention.
+
+    q: (N, Sq, H, D); k, v: (N, Skv, H, D)
+    bias: (B, H, Sq, Skv), N % B == 0 (each bias batch element shared by N/B
+          consecutive rows — Evoformer pair bias), or (H, Sq, Skv) as B=1.
+    mask: (N, Skv) additive fp32, broadcast over H and Sq.
+
+    Returns (out (N, Sq, H, D) in q.dtype, lse (N, H, Sq) fp32). This is the
+    exact computation the fused kernel performs tile-wise; it materializes the
+    full (N, H, Sq, Skv) scores tensor and is the A/B baseline + fallback.
+    """
+    n, sq, h, d = q.shape
+    s = jnp.einsum("nqhd,nkhd->nhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if bias is not None:
+        if bias.ndim == 3:
+            bias = bias[None]
+        b = bias.shape[0]
+        s = s.reshape((b, n // b) + s.shape[1:])
+        s = s + bias.astype(jnp.float32)[:, None]
+        s = s.reshape((n,) + s.shape[2:])
+    if mask is not None:
+        s = s + mask.astype(jnp.float32)[:, None, None, :]
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    ex = jnp.exp(s - m)
+    l = jnp.sum(ex, axis=-1, keepdims=True)
+    probs = (ex / jnp.maximum(l, 1e-30)).astype(q.dtype)
+    out = jnp.einsum("nhqk,nkhd->nqhd", probs, v,
+                     preferred_element_type=jnp.float32).astype(q.dtype)
+    lse = (m + jnp.log(jnp.maximum(l, 1e-30)))[..., 0]
+    return out, lse
+
+
 def layer_norm_ref(
     x: jax.Array,
     gamma: jax.Array,

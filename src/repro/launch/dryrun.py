@@ -282,7 +282,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         donate = (2,)
     else:
         donate = ()
-    with jax.set_mesh(mesh):
+    # jax>=0.5 wants jax.set_mesh; older jax uses the Mesh context manager.
+    with (jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh):
         jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                          donate_argnums=donate)
         lowered = jitted.lower(*args)

@@ -8,23 +8,30 @@ from __future__ import annotations
 import jax
 
 
+def _mesh(shape, axes):
+    """jax.make_mesh across jax versions: axis_types (Auto) when the running
+    jax supports it, plain mesh otherwise (pre-0.5 jax has no AxisType and
+    defaults to the same auto behavior)."""
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        )
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return _mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1, data: int | None = None):
     """Small mesh over the actual local devices (tests, examples)."""
     n = len(jax.devices())
     data = data or (n // model)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _mesh((data, model), ("data", "model"))
 
 
 # Hardware constants for the roofline (TPU v5e).

@@ -1,11 +1,15 @@
 """Attention layers.
 
-Three execution strategies, chosen by the caller:
+Execution strategies, chosen by the caller:
 
+* ``ops.fused_attention`` (kernels/ops.py) — flash-style fused gated
+  attention: online softmax over KV tiles in one Pallas kernel, scores never
+  materialized in HBM, recompute custom_vjp. The Evoformer's four attention
+  sites route through it (core/evoformer._gated_attention).
 * ``evoformer_attention`` — scores-materialized gated attention with the
   paper's fused scale+bias+mask+softmax Pallas kernel. Evoformer rows are
-  short (N_r <= a few k), which is exactly the regime the paper's kernel
-  targets.
+  short (N_r <= a few k), which is the regime the paper's kernel targets;
+  kept as the A/B baseline (REPRO_DISABLE_KERNELS=1) and the TP path.
 * ``blockwise_attention`` — flash-style online-softmax attention (lax.scan
   over q/kv blocks, fp32 running max/sum). Used for decoder-LM training and
   32k prefill, where scores cannot be materialized.
@@ -130,7 +134,10 @@ def evoformer_attention(
     """q,k,v: (N, S, H, hd); bias: (B, H, Sq, Skv) pair bias with N % B == 0
     (each bias batch element shared by N/B rows); mask: (N, Skv).
 
-    Returns (N, Sq, H, hd). Softmax via the paper's fused kernel.
+    Returns (N, Sq, H, hd). Softmax via the paper's fused kernel. This is the
+    scores-materialized form — ops.fused_attention is the flash-style fused
+    kernel with identical semantics (same bias/mask contract) that the
+    Evoformer sites use; this one stays as the A/B oracle + TP-mode path.
     """
     hd = q.shape[-1]
     scale = 1.0 / (hd**0.5)

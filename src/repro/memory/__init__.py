@@ -1,0 +1,10 @@
+"""Memory planning subsystem: the AutoChunk activation-memory planner."""
+from repro.memory.autochunk import (  # noqa: F401
+    ChunkPlan,
+    apply_plan,
+    attention_transient_bytes,
+    evoformer_peak_bytes,
+    plan_decoder_blocks,
+    plan_evoformer_chunks,
+    resolve_evoformer_config,
+)

@@ -1,0 +1,343 @@
+"""AutoChunk: an activation-memory planner for the chunk knobs.
+
+FastFold's AutoChunk "automatically determines the chunk strategy" instead of
+hand-tuned constants. This module is that planner for our stack: given the
+static tensor shapes of a forward pass, the compute dtype, and the per-chip
+HBM budget (``launch.mesh.HBM_BYTES``), it picks
+
+  * ``inference_chunk`` — paper-§V.C group chunking of the attention sites,
+  * ``opm_chunk``       — Outer-Product-Mean j-chunking,
+  * ``attn_kv_tile``    — KV tile of the fused flash-attention kernel
+                          (forward tile and backward recompute block),
+
+as the LEAST-chunked settings whose modeled peak activation bytes fit the
+budget (0 = knob off / kernel default — selected whenever the unchunked plan
+fits). Chunk knobs serialize compute, so the preference order when shrinking
+is: KV tile first (near-free: still one pass over KV), then OPM j-chunk
+(scan), then inference_chunk (whole attention sites serialized).
+
+Contract:
+  * Planning is pure Python over static shapes — it runs at trace time
+    (``alphafold_forward``), never inside the computation.
+  * The returned plan never exceeds the budget when ANY candidate fits;
+    ``fits=False`` flags that even the smallest plan is over budget (the
+    caller decides — e.g. raise the DAP degree, paper Table V).
+  * Hand-set (nonzero) knobs are respected: they are pinned during planning
+    and never overwritten by ``resolve_evoformer_config``.
+
+The memory model is the roofline-style dominant-term model used by
+``bench_inference`` (paper §III.B: the cubic N_r^3*H attention transient),
+not a byte-exact simulator: every term is the size of one live dominant
+buffer, and the total is the peak of the block's phases.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from repro.kernels.ops import _DEFAULT_KV_TILE
+from repro.launch.mesh import HBM_BYTES
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _eff_chunk(total: int, chunk: int) -> int:
+    """Effective processed-at-once extent for a tile knob (0 = whole). Tiles
+    (the attention KV tile) need no divisibility — the kernel pads + masks."""
+    if chunk and 0 < chunk < total:
+        return chunk
+    return total
+
+
+def _eff_div_chunk(total: int, chunk: int) -> int:
+    """Effective extent for a CHUNK knob. Mirrors the runtime exactly:
+    ``_gated_attention`` and ``outer_product_mean`` silently run UNCHUNKED
+    when the chunk does not divide the extent (``g % chunk != 0``), so a
+    non-dividing chunk must be modeled as the whole extent — otherwise a
+    plan could claim fits=True and then run unchunked over budget."""
+    if chunk and 0 < chunk < total and total % chunk == 0:
+        return chunk
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Memory model
+# ---------------------------------------------------------------------------
+
+
+def attention_transient_bytes(
+    groups: int,
+    heads: int,
+    seq: int,
+    head_dim: int,
+    *,
+    kv_len: int | None = None,
+    kv_tile: int = 0,
+    fused: bool = True,
+    dtype_bytes: int = 2,
+) -> int:
+    """Peak transient of one gated-attention site over ``groups`` rows.
+
+    fused (flash kernel): q/k/v/out in compute dtype plus the fp32
+    (groups, heads, seq, kv_tile) recompute block of the backward scan — the
+    largest live buffer on the fused path; it scales with the KV tile, not
+    with kv_len^2.
+
+    scores-materialized: two (groups, heads, seq, kv_len) copies
+    (scores + probs) — the paper's cubic transient when groups ~ seq.
+    """
+    kv = kv_len if kv_len is not None else seq
+    qkvo = 4 * groups * seq * heads * head_dim * dtype_bytes
+    if fused:
+        tile = _eff_chunk(kv, kv_tile or _DEFAULT_KV_TILE)
+        block = groups * heads * seq * tile * 4          # fp32 p/ds block
+        lse = groups * heads * seq * 4
+        return qkvo + block + lse
+    return qkvo + 2 * groups * heads * seq * kv * dtype_bytes
+
+
+def evoformer_peak_bytes(
+    cfg,
+    *,
+    batch: int,
+    n_seq: int,
+    n_res: int,
+    dap: int = 1,
+    fused: bool = True,
+    inference_chunk: int = 0,
+    opm_chunk: int = 0,
+    attn_kv_tile: int = 0,
+) -> dict:
+    """Dominant per-device activation terms (bytes) of one Evoformer block.
+
+    cfg: EvoformerConfig (duck-typed: d_msa, d_pair, msa_heads, pair_heads,
+    head_dim, opm_dim, tri_mult_dim, compute_dtype). Returns a dict of named
+    terms; ``sum(values())`` is the modeled peak.
+    """
+    dt = jnp.dtype(cfg.compute_dtype).itemsize
+    s_loc = _ceil_div(n_seq, dap)
+    r_loc = _ceil_div(n_res, dap)
+
+    terms = {
+        # A few live copies of each representation (input, LN'ed, update).
+        "msa_rep": 3 * batch * s_loc * n_res * cfg.d_msa * dt,
+        "pair_rep": 3 * batch * r_loc * n_res * cfg.d_pair * dt,
+        # Gathered (B, H, r, r) pair-bias tensors — not chunkable.
+        "pair_bias": batch * max(cfg.msa_heads, cfg.pair_heads)
+        * n_res * n_res * dt,
+        # Triangular-mult a/b projections + the gathered b_full operand.
+        "tri_mult": batch * cfg.tri_mult_dim * dt
+        * (2 * r_loc * n_res + n_res * n_res),
+    }
+    # Attention: MSA row (groups = local MSA rows) and triangle (groups =
+    # local pair rows) phases don't overlap — take the max.
+    attn_row = attention_transient_bytes(
+        batch * _eff_div_chunk(s_loc, inference_chunk), cfg.msa_heads, n_res,
+        cfg.head_dim, kv_tile=attn_kv_tile, fused=fused, dtype_bytes=dt)
+    attn_tri = attention_transient_bytes(
+        batch * _eff_div_chunk(r_loc, inference_chunk), cfg.pair_heads, n_res,
+        cfg.head_dim, kv_tile=attn_kv_tile, fused=fused, dtype_bytes=dt)
+    terms["attention"] = max(attn_row, attn_tri)
+    # Outer Product Mean: fp32 (i_loc, jc, c, c) intermediate + gathered
+    # right-projection operand.
+    jc = _eff_div_chunk(n_res, opm_chunk)
+    terms["opm"] = (batch * r_loc * jc * cfg.opm_dim * cfg.opm_dim * 4
+                    + batch * n_seq * n_res * cfg.opm_dim * dt)
+    return terms
+
+
+# ---------------------------------------------------------------------------
+# Evoformer planner
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ChunkPlan:
+    inference_chunk: int = 0
+    opm_chunk: int = 0
+    attn_kv_tile: int = 0
+    est_bytes: int = 0
+    budget_bytes: int = 0
+    fits: bool = True
+
+    def describe(self) -> str:
+        return (f"ic={self.inference_chunk} oc={self.opm_chunk} "
+                f"kt={self.attn_kv_tile} est={self.est_bytes >> 20}MB "
+                f"budget={self.budget_bytes >> 20}MB fits={self.fits}")
+
+
+_IC_CANDIDATES = (0, 256, 128, 64, 32, 16, 8, 4, 2, 1)
+_OC_CANDIDATES = (0, 1024, 512, 256, 128, 64, 32, 16, 8)
+_KT_CANDIDATES = (0, 256, 128)
+
+
+def _knob_candidates(fixed: int, options, limit: int):
+    if fixed:
+        return (fixed,)
+    return tuple(o for o in options if o == 0 or o < limit) or (0,)
+
+
+def _div_candidates(fixed: int, options, *totals):
+    """Candidates for a CHUNK knob: 0 (off) plus values that divide at least
+    one of the chunked extents (non-dividing chunks are runtime no-ops — see
+    _eff_div_chunk), augmented with total/k divisors so non-power-of-two
+    extents still get effective options."""
+    if fixed:
+        return (fixed,)
+    cands: set[int] = set()
+    for total in totals:
+        cands |= {o for o in options if 0 < o < total and total % o == 0}
+        cands |= {total // k for k in (2, 4, 8, 16, 32, 64)
+                  if total % k == 0 and 1 <= total // k < total}
+    return (0,) + tuple(sorted(cands, reverse=True))
+
+
+def plan_evoformer_chunks(
+    cfg,
+    *,
+    batch: int,
+    n_seq: int,
+    n_res: int,
+    budget_bytes: int = HBM_BYTES,
+    dap: int = 1,
+    fused: bool = True,
+) -> ChunkPlan:
+    """Pick the least-chunked (inference_chunk, opm_chunk, attn_kv_tile)
+    whose modeled peak fits ``budget_bytes``. Nonzero knobs already set on
+    ``cfg`` are pinned. Never exceeds the budget when any candidate fits;
+    otherwise returns the minimal-memory plan with ``fits=False``."""
+    s_loc = _ceil_div(n_seq, dap)
+    r_loc = _ceil_div(n_res, dap)
+    groups = max(s_loc, r_loc)
+    ics = _div_candidates(cfg.inference_chunk, _IC_CANDIDATES, s_loc, r_loc)
+    ocs = _div_candidates(cfg.opm_chunk, _OC_CANDIDATES, n_res)
+    kts = _knob_candidates(getattr(cfg, "attn_kv_tile", 0), _KT_CANDIDATES,
+                           n_res if fused else 1)
+
+    def est(ic, oc, kt) -> int:
+        return sum(evoformer_peak_bytes(
+            cfg, batch=batch, n_seq=n_seq, n_res=n_res, dap=dap, fused=fused,
+            inference_chunk=ic, opm_chunk=oc, attn_kv_tile=kt).values())
+
+    def serialization_cost(ic, oc, kt):
+        # Lexicographic preference: avoid/maximize inference_chunk first
+        # (whole sites serialized), then opm_chunk, then the KV tile.
+        return (
+            _ceil_div(groups, ic) if ic else 0,
+            _ceil_div(n_res, oc) if oc else 0,
+            _ceil_div(n_res, kt) if kt else 0,
+        )
+
+    best = None          # least serialization among fitting plans
+    smallest = None      # minimal est_bytes overall (fallback)
+    for ic in ics:
+        for oc in ocs:
+            for kt in kts:
+                e = est(ic, oc, kt)
+                key = serialization_cost(ic, oc, kt)
+                if smallest is None or e < smallest[0]:
+                    smallest = (e, ic, oc, kt)
+                if e <= budget_bytes and (best is None or key < best[0]):
+                    best = (key, e, ic, oc, kt)
+    if best is not None:
+        _, e, ic, oc, kt = best
+        return ChunkPlan(ic, oc, kt, e, budget_bytes, fits=True)
+    e, ic, oc, kt = smallest
+    return ChunkPlan(ic, oc, kt, e, budget_bytes, fits=False)
+
+
+def apply_plan(cfg, plan: ChunkPlan):
+    """EvoformerConfig with the plan's knobs filled in (hand-set nonzero
+    knobs on cfg win — the planner already pinned them)."""
+    return dataclasses.replace(
+        cfg,
+        inference_chunk=cfg.inference_chunk or plan.inference_chunk,
+        opm_chunk=cfg.opm_chunk or plan.opm_chunk,
+        attn_kv_tile=cfg.attn_kv_tile or plan.attn_kv_tile,
+    )
+
+
+def resolve_evoformer_config(
+    cfg,
+    *,
+    batch: int,
+    n_seq: int,
+    n_res: int,
+    dap: int = 1,
+    budget_bytes: int = HBM_BYTES,
+):
+    """AutoChunk entry point used by ``alphafold_forward``: returns cfg with
+    every knob left at 0 replaced by the planned value (no-op when
+    ``cfg.auto_chunk`` is False or everything already fits unchunked)."""
+    if not getattr(cfg, "auto_chunk", False):
+        return cfg
+    from repro.kernels import ops
+
+    fused = ops.fused_attention_supported(
+        (batch, n_seq, n_res, cfg.msa_heads, cfg.head_dim), kv_len=n_res,
+        dtype=cfg.compute_dtype)
+    plan = plan_evoformer_chunks(
+        cfg, batch=batch, n_seq=n_seq, n_res=n_res,
+        budget_bytes=budget_bytes, dap=dap, fused=fused)
+    return apply_plan(cfg, plan)
+
+
+# ---------------------------------------------------------------------------
+# Decoder / serving planner
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DecoderPlan:
+    attn_q_block: int
+    attn_kv_block: int
+    est_bytes: int
+    budget_bytes: int
+    fits: bool
+
+
+def decoder_attention_bytes(cfg, *, n_slots: int, max_seq: int,
+                            q_block: int, kv_block: int) -> int:
+    """Dominant serving-time bytes: the batched KV cache + the prefill
+    flash-attention probs block + logits. cfg is a ModelConfig."""
+    hd = cfg.resolved_head_dim
+    dt = 1 if getattr(cfg, "kv_cache_int8", False) else 2
+    cache = cfg.n_layers * n_slots * max_seq * 2 * cfg.n_kv * hd * dt
+    qb = min(q_block or max_seq, max_seq)
+    kvb = min(kv_block or max_seq, max_seq)
+    probs = cfg.n_heads * qb * kvb * 4              # fp32 block in the scan
+    acts = 3 * max_seq * cfg.n_heads * hd * 2
+    logits = n_slots * cfg.vocab * 4
+    return cache + probs + acts + logits
+
+
+def plan_decoder_blocks(cfg, *, n_slots: int, max_seq: int,
+                        budget_bytes: int = HBM_BYTES):
+    """Serving-engine AutoChunk: keep the configured attention blocks when
+    they fit the HBM budget, otherwise shrink — KV block first, then the q
+    block. Returns (ModelConfig, DecoderPlan)."""
+    q_opts = [cfg.attn_q_block] + [b for b in (256, 128, 64, 32)
+                                   if not cfg.attn_q_block
+                                   or b < cfg.attn_q_block]
+    kv_opts = [cfg.attn_kv_block] + [b for b in (512, 256, 128, 64, 32)
+                                     if not cfg.attn_kv_block
+                                     or b < cfg.attn_kv_block]
+    best = None
+    for qb in q_opts:              # outer: shrink q last
+        for kvb in kv_opts:        # inner: shrink kv first
+            e = decoder_attention_bytes(cfg, n_slots=n_slots,
+                                        max_seq=max_seq, q_block=qb,
+                                        kv_block=kvb)
+            if best is None or e < best[0]:
+                best = (e, qb, kvb)
+            if e <= budget_bytes:
+                plan = DecoderPlan(qb, kvb, e, budget_bytes, fits=True)
+                return dataclasses.replace(
+                    cfg, attn_q_block=qb, attn_kv_block=kvb), plan
+    e, qb, kvb = best
+    plan = DecoderPlan(qb, kvb, e, budget_bytes, fits=False)
+    return dataclasses.replace(cfg, attn_q_block=qb, attn_kv_block=kvb), plan

@@ -181,13 +181,19 @@ def _symbols(lines: list[str]) -> dict[str, tuple[list[int], int]]:
 
 def _dot_flops(line: str, symtab: dict[str, list[int]]) -> float:
     """FLOPs of a `dot` op: 2 * prod(result dims) * prod(contracting sizes).
-    Operand shapes resolved via the computation's symbol table (XLA prints
-    operands by name only)."""
-    m = re.search(r"=\s*\w+\[([\d,]*)\]\S*\s+dot\(\s*%?([\w.\-]+)", line)
+    Operand shapes come from the inline operand type when the HLO text prints
+    one (``dot(f32[64,32]{1,0} %arg, ...)``, newer XLA) and are otherwise
+    resolved via the computation's symbol table (name-only operands)."""
+    m = re.search(r"=\s*\w+\[([\d,]*)\]\S*\s+dot\(\s*"
+                  r"(?:(\w+\[[\d,]*\])\S*\s+)?%?([\w.\-]+)", line)
     if not m:
         return 0.0
     res_dims = [int(d) for d in m.group(1).split(",") if d] or [1]
-    lhs_dims = (symtab.get(m.group(2)) or ([], 0))[0]
+    if m.group(2):
+        md = re.match(r"\w+\[([\d,]*)\]", m.group(2))
+        lhs_dims = [int(d) for d in md.group(1).split(",") if d]
+    else:
+        lhs_dims = (symtab.get(m.group(3)) or ([], 0))[0]
     mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
     contract = 1
     if lhs_dims and mc and mc.group(1):

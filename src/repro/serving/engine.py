@@ -7,6 +7,12 @@ Design: a fixed number of slots share one batched KV cache. Requests are
 admitted into free slots (B=1 prefill, cache rows scattered into the slot),
 all active slots advance together with one batched decode step per token,
 finished sequences free their slots immediately.
+
+Memory: the engine's attention blocks come from the AutoChunk planner
+(repro.memory.autochunk.plan_decoder_blocks) — the configured
+``attn_q_block``/``attn_kv_block`` are kept when the KV cache + prefill
+transients fit the HBM budget and shrunk (KV block first) when they don't.
+``auto_plan=False`` restores the raw config.
 """
 from __future__ import annotations
 
@@ -18,6 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.launch.mesh import HBM_BYTES
+from repro.memory.autochunk import plan_decoder_blocks
 from repro.models.decoder import init_cache, model_forward
 
 
@@ -41,8 +49,15 @@ def sample_token(logits, rng, temperature: float):
 
 class ServingEngine:
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
-                 max_seq: int = 512, dtype=jnp.bfloat16):
+                 max_seq: int = 512, dtype=jnp.bfloat16,
+                 auto_plan: bool = True, hbm_budget: int = HBM_BYTES):
         self.params = params
+        if auto_plan:
+            cfg, self.plan = plan_decoder_blocks(
+                cfg, n_slots=n_slots, max_seq=max_seq,
+                budget_bytes=hbm_budget)
+        else:
+            self.plan = None
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_seq = max_seq

@@ -1,0 +1,40 @@
+"""Hypothesis import shim: property tests degrade to skips when hypothesis is
+not installed, instead of erroring the whole module at collection.
+
+Usage (replaces ``from hypothesis import given, settings, strategies as st``):
+
+    from hypothesis_compat import given, settings, st
+
+With hypothesis present this re-exports the real API unchanged. Without it,
+``@given(...)`` marks the test skipped, ``@settings(...)`` is a no-op, and
+``st.<anything>(...)`` returns inert placeholders so module-level strategy
+expressions still evaluate — every non-property test in the module keeps
+collecting and running.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # pragma: no cover - exercised where hypothesis is absent
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        """st.integers(...), st.floats(...), ... -> inert placeholder."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
