@@ -13,9 +13,15 @@ Three executions of the same gated-attention math
 For each shape: forward and forward+backward wall time, plus the modeled peak
 attention-transient bytes (repro.memory.autochunk.attention_transient_bytes)
 — the fused column scales with the KV tile, the materialized column with
-R^2. On CPU the Pallas kernel runs in interpret mode, so absolute times favor
-the XLA-fused materialized path; the TPU target is where the fwd+bwd win
-lands (the bytes columns are backend-independent).
+R^2. On non-TPU backends the fused path runs its XLA-native online-softmax
+leg (interpret-mode Pallas only under REPRO_PALLAS_INTERPRET=1, the
+kernel-validation leg); the bytes columns are backend-independent.
+
+Backward-leg A/B (``attn_bwd_*`` rows): the fused path's *active* backward
+(the fused Pallas kernel on TPU / under REPRO_PALLAS_INTERPRET=1; the jnp
+KV-scan elsewhere) vs the jnp KV-scan forced via ops.FORCE_SCAN_ATTN_BWD —
+the acceptance gate is active-bwd no slower than the scan at Evoformer
+shapes on the kernel's target backend.
 """
 import functools
 
@@ -95,8 +101,33 @@ def run():
             csv_row(f"attn_{name}_fwdbwd_g{g}s{s}", t_b,
                     f"peak_attn_bytes={peak}")
         ratio = times[("fused", "bwd")] / times[("materialized", "bwd")]
+        backend = jax.default_backend()
         csv_row(f"attn_fused_vs_materialized_fwdbwd_g{g}s{s}", 0,
-                f"ratio={ratio:.2f}x (interpret-mode Pallas on CPU)")
+                f"ratio={ratio:.2f}x (backend={backend})")
+
+        # Backward-leg A/B: active fused backward vs forced jnp KV-scan.
+        def grad_fn():
+            return jax.jit(jax.grad(
+                lambda q_, k_, v_: jnp.sum(ops.fused_attention(
+                    q_, k_, v_, bias=bias, mask=mask, kv_tile=KV_TILE) ** 2),
+                argnums=(0, 1, 2)))
+
+        f_active = grad_fn()
+        t_active = time_fn(lambda *_: f_active(q, k, v), None, iters=5,
+                           warmup=2)
+        old = ops.FORCE_SCAN_ATTN_BWD
+        try:
+            ops.FORCE_SCAN_ATTN_BWD = True
+            f_scan = grad_fn()  # fresh jit wrapper -> retraces with the flag
+            t_scan = time_fn(lambda *_: f_scan(q, k, v), None, iters=5,
+                             warmup=2)
+        finally:
+            ops.FORCE_SCAN_ATTN_BWD = old
+        active_leg = "pallas" if ops._pallas_enabled() else "jnp-scan"
+        csv_row(f"attn_bwd_active_g{g}s{s}", t_active, f"leg={active_leg}")
+        csv_row(f"attn_bwd_scan_g{g}s{s}", t_scan, "leg=jnp-scan")
+        csv_row(f"attn_bwd_active_vs_scan_g{g}s{s}", 0,
+                f"ratio={t_active / t_scan:.2f}x (backend={backend})")
 
 
 if __name__ == "__main__":

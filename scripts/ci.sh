@@ -1,17 +1,43 @@
 #!/usr/bin/env bash
-# Tier-1 CI: run the test suite twice — once with the Pallas kernels enabled
-# (fused flash-attention / softmax / LN / elementwise paths) and once with
-# REPRO_DISABLE_KERNELS=1 (pure-jnp oracle + scores-materialized attention).
-# Any divergence between a kernel and its oracle fails fast in the first leg;
-# the second leg proves the fallback/A-B path stays healthy on its own.
+# Tier-1 CI, four legs:
+#   1. default          — Pallas kernels enabled; on CPU each op runs its
+#                         XLA-native leg (fused attention = online-softmax
+#                         scan), on TPU the Pallas kernels.
+#   2. kernels disabled — REPRO_DISABLE_KERNELS=1: pure-jnp oracles and the
+#                         scores-materialized attention (A/B path).
+#   3. kernel validation— REPRO_PALLAS_INTERPRET=1: the Pallas kernels
+#                         (fwd + the fused attention backward) execute in
+#                         interpret mode on the kernel test modules.
+#   4. multi-device     — 8 host devices: distributed DAP/GSPMD parity, the
+#                         shard-mapped fused attention, and the fused
+#                         attention suite, on both kernel legs.
+# Any divergence between a kernel and its oracle fails fast in legs 1/3; leg
+# 2 proves the fallback path stays healthy on its own.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "=== tier-1 leg 1/2: Pallas kernels ENABLED ==="
+echo "=== tier-1 leg 1/4: kernels ENABLED (XLA-native legs off-TPU) ==="
 python -m pytest -x -q "$@"
 
-echo "=== tier-1 leg 2/2: kernels DISABLED (REPRO_DISABLE_KERNELS=1, oracle paths) ==="
+echo "=== tier-1 leg 2/4: kernels DISABLED (REPRO_DISABLE_KERNELS=1, oracle paths) ==="
 REPRO_DISABLE_KERNELS=1 python -m pytest -x -q "$@"
 
-echo "ci.sh: both legs green"
+if [ "$#" -gt 0 ]; then
+    # Scoped developer run: legs 3/4 run fixed module lists that would ignore
+    # the selection — stop here rather than silently dropping the arguments.
+    echo "ci.sh: args given — scoped run, legs 1-2 only"
+    exit 0
+fi
+
+echo "=== tier-1 leg 3/4: Pallas interpret validation (REPRO_PALLAS_INTERPRET=1) ==="
+REPRO_PALLAS_INTERPRET=1 python -m pytest -x -q \
+    tests/test_kernels.py tests/test_fused_attention.py
+
+echo "=== tier-1 leg 4/4: multi-device (8 host devices), both kernel legs ==="
+XLA_FLAGS="--xla_force_host_platform_device_count=8" python -m pytest -x -q \
+    tests/test_distributed.py tests/test_fused_attention.py
+XLA_FLAGS="--xla_force_host_platform_device_count=8" REPRO_DISABLE_KERNELS=1 \
+    python -m pytest -x -q tests/test_distributed.py
+
+echo "ci.sh: all legs green"

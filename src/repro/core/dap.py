@@ -10,6 +10,11 @@ convention:
   msa_mask like msa; pair_mask_loc like pair; seq_mask replicated over model.
   params   replicated over 'model' (DAP's defining property: full parameters
            per device, sharded activations).
+
+Inside the shard_map body every tensor is a local shard, so the Evoformer's
+four attention sites run the fused flash-attention kernel directly on their
+local (B, G/N, S, H, D) blocks (ShardMapDist.sharded_attention) — the
+paper-faithful DAP path composes with the §IV.A kernels with no resharding.
 """
 from __future__ import annotations
 
@@ -18,9 +23,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
 
-from repro.core.dist import ShardMapDist, batch_spec
+from repro.core.dist import ShardMapDist, batch_spec, shard_map_compat
 from repro.core import evoformer as evo
 
 
@@ -63,11 +67,10 @@ def dap_evoformer_stack(mesh, cfg: evo.EvoformerConfig, *, train: bool = False,
             dist=dist, cfg=cfg, rng=None, train=train, remat=remat,
         )
 
-    return shard_map(
+    return shard_map_compat(
         local_fn,
-        mesh=mesh,
-        in_specs=(P(), s["msa"], s["pair"], s["msa_mask"], s["seq_mask"],
-                  s["pair_mask"]),
-        out_specs=(s["msa"], s["pair"]),
-        check_rep=False,
+        mesh,
+        (P(), s["msa"], s["pair"], s["msa_mask"], s["seq_mask"],
+         s["pair_mask"]),
+        (s["msa"], s["pair"]),
     )

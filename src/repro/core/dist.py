@@ -16,6 +16,24 @@ three execution modes:
 
 Sharded-axis convention (shard_map local view): the DAP axis shards exactly one
 named dimension of each tensor; helpers below move it.
+
+``sharded_attention`` contract (the kernel-side sharding hook): group
+attention ``softmax(scale*qk^T + bias + mask) @ v`` on the 5D Evoformer
+layout — q, k, v ``(B, G, S, H, D)`` with the G (group) dim riding the DAP
+axis, bias ``(B, H, S, S)`` replicated over G (or None), mask ``(B, G, S)``
+additive fp32 (or None). Each backend must run ``ops.fused_attention`` on
+*local* ``(B_loc, G_loc, S, H, D)`` blocks so the kernel's internal
+``(B·G, S, H, D)`` flatten never merges two mesh-sharded dims:
+
+* ``LocalDist`` / ``ShardMapDist`` — the tensors in hand are already local
+  (whole array / shard_map local view): call the kernel directly.
+* ``GspmdDist`` — tensors are global: wrap the kernel call in ``shard_map``
+  over ``(batch_axes, 'model')`` with the bias replicated, so each device
+  runs the fused kernel on its local block and GSPMD never sees a merged
+  ``(B·G, ...)`` reshape (which would force an all-gather of the whole
+  representation). ``sharded_attention_supported`` reports whether the
+  global shape divides the mesh; callers fall back to the (unflattened)
+  scores-materialized path otherwise.
 """
 from __future__ import annotations
 
@@ -25,6 +43,22 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+try:  # jax >= 0.6 promotes shard_map out of experimental
+    from jax import shard_map as _shard_map_fn  # type: ignore[attr-defined]
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _shard_map_fn
+
+
+def shard_map_compat(fn, mesh, in_specs, out_specs):
+    """shard_map without replication checking, across jax versions
+    (``check_rep`` was renamed ``check_vma``)."""
+    try:
+        return _shard_map_fn(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=False)
+    except TypeError:
+        return _shard_map_fn(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
 
 
 def named_axis_size(axis: str) -> int:
@@ -36,10 +70,20 @@ def named_axis_size(axis: str) -> int:
     return frame if isinstance(frame, int) else frame.size
 
 
+def _local_fused_attention(q, k, v, *, bias=None, mask=None, scale=None,
+                           kv_tile=0):
+    from repro.kernels import ops
+
+    return ops.fused_attention(q, k, v, bias=bias, mask=mask, scale=scale,
+                               kv_tile=kv_tile)
+
+
 class LocalDist:
     """Identity backend (1 DAP device)."""
 
     axis_size: int = 1
+    # Tensors handed to this backend are device-local (safe to flatten).
+    local_tensors: bool = True
 
     def all_to_all(self, x, *, split_axis: int, concat_axis: int):
         return x
@@ -53,12 +97,22 @@ class LocalDist:
     def constrain(self, x, dims):
         return x
 
+    def sharded_attention_supported(self, q_shape) -> bool:
+        return True
+
+    def sharded_attention(self, q, k, v, *, bias=None, mask=None, scale=None,
+                          kv_tile=0):
+        return _local_fused_attention(q, k, v, bias=bias, mask=mask,
+                                      scale=scale, kv_tile=kv_tile)
+
 
 @dataclass(frozen=True)
 class ShardMapDist:
     """Explicit-collective DAP; use inside shard_map(..., axis_names=(axis,))."""
 
     axis: str = "model"
+    # Inside shard_map every tensor is a local shard (safe to flatten).
+    local_tensors: bool = True
 
     @property
     def axis_size(self) -> int:
@@ -83,6 +137,17 @@ class ShardMapDist:
     def constrain(self, x, dims):
         return x
 
+    def sharded_attention_supported(self, q_shape) -> bool:
+        return True
+
+    def sharded_attention(self, q, k, v, *, bias=None, mask=None, scale=None,
+                          kv_tile=0):
+        # Already inside shard_map: q/k/v/mask are the local (B, G/N, S, ...)
+        # shards and bias was all_gathered to the full (B, H, S, S) — the
+        # fused kernel runs on the local block as-is.
+        return _local_fused_attention(q, k, v, bias=bias, mask=mask,
+                                      scale=scale, kv_tile=kv_tile)
+
 
 @dataclass(frozen=True)
 class GspmdDist:
@@ -95,6 +160,9 @@ class GspmdDist:
 
     mesh: object  # jax.sharding.Mesh
     axis: str = "model"
+    # Tensors are GLOBAL views whose dims may be mesh-sharded: flattening
+    # (B, G, ...) leading dims merges sharded dims (forced all-gather).
+    local_tensors: bool = False
 
     @property
     def axis_size(self) -> int:
@@ -121,6 +189,49 @@ class GspmdDist:
         return jax.lax.with_sharding_constraint(
             x, jax.sharding.NamedSharding(self.mesh, spec)
         )
+
+    def _batch_shardable(self, b: int) -> bool:
+        bx = batch_spec(self.mesh)
+        nb = 1
+        for a in bx:
+            nb *= self.mesh.shape[a]
+        return b % nb == 0
+
+    def sharded_attention_supported(self, q_shape) -> bool:
+        """The shard_map wrapper needs the group dim to divide the DAP axis
+        (a non-dividing batch dim is handled by replicating batch)."""
+        return q_shape[1] % self.mesh.shape[self.axis] == 0
+
+    def sharded_attention(self, q, k, v, *, bias=None, mask=None, scale=None,
+                          kv_tile=0):
+        """Run the fused kernel under shard_map over (batch_axes, model):
+        each device gets its local (B_loc, G_loc, S, H, D) block with the
+        gathered bias replicated — the kernel's (B·G) flatten happens on
+        local shards only, so GSPMD never inserts a merged-(B, G) all-gather.
+        Differentiable (shard_map transposes the kernel's custom_vjp)."""
+        bx = batch_spec(self.mesh)
+        if not self._batch_shardable(q.shape[0]):
+            bx = None  # replicate batch; the DAP axis still shards G
+        io = P(bx, self.axis, None, None, None)
+        in_specs = [io, io, io]
+        args = [q, k, v]
+        has_bias, has_mask = bias is not None, mask is not None
+        if has_bias:
+            in_specs.append(P(bx, None, None, None))
+            args.append(bias)
+        if has_mask:
+            in_specs.append(P(bx, self.axis, None))
+            args.append(mask)
+
+        def local_fn(*xs):
+            b_ = xs[3] if has_bias else None
+            m_ = xs[3 + has_bias] if has_mask else None
+            return _local_fused_attention(xs[0], xs[1], xs[2], bias=b_,
+                                          mask=m_, scale=scale,
+                                          kv_tile=kv_tile)
+
+        return shard_map_compat(local_fn, self.mesh, tuple(in_specs), io)(
+            *args)
 
 
 def batch_spec(mesh) -> tuple:

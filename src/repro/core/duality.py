@@ -22,6 +22,14 @@ contract is expressed structurally:
 This module provides the explicit helper (an optimization-barrier-fenced
 launch window) plus the HLO verifier used by benchmarks/EXPERIMENTS.md to
 certify that independent compute separates a collective from its first use.
+
+``overlap_window`` is wired at the Evoformer launch sites (core/evoformer.py):
+the MSA swap-back all_to_all is fenced with the completed pair stack at block
+end, the gathered pair bias with the QKV projections, and the OPM/triangular
+gather operands with their independent left projections — so the scheduler
+cannot sink those collectives to their consumers past the overlap-eligible
+compute. tests/test_distributed.py lowers a 2-block stack and checks
+``overlap_report`` on the scheduled HLO.
 """
 from __future__ import annotations
 
@@ -30,12 +38,30 @@ import re
 import jax
 
 
+@jax.custom_vjp
 def overlap_window(comm_result, independent_result):
     """Fence `independent_result` as not-reorderable *past* the communication:
     returns both, tied through an optimization barrier so the scheduler keeps
     the independent compute inside the launch->use window rather than sinking
-    it below the consumer. A no-op numerically."""
+    it below the consumer. A no-op numerically.
+
+    Differentiable by construction (optimization_barrier has no AD rule):
+    the backward barriers the *cotangents* the same way — reverse-mode AD
+    turns the forward collective into its dual collective, and the mirrored
+    fence keeps the dual's launch->use window, which is exactly the paper's
+    forward/backward duality."""
     return jax.lax.optimization_barrier((comm_result, independent_result))
+
+
+def _overlap_window_fwd(comm_result, independent_result):
+    return overlap_window(comm_result, independent_result), None
+
+
+def _overlap_window_bwd(_, g):
+    return jax.lax.optimization_barrier(g)
+
+
+overlap_window.defvjp(_overlap_window_fwd, _overlap_window_bwd)
 
 
 _COLLECTIVES = ("all-to-all", "all-gather", "all-reduce", "reduce-scatter",

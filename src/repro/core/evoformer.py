@@ -38,6 +38,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import duality
 from repro.core.dist import LocalDist
 from repro.kernels import ops
 from repro.layers.attention import evoformer_attention, init_attention, AttnDims, \
@@ -180,11 +181,15 @@ def _gated_attention(p_attn, x_n, bias, key_mask, dims: AttnDims,
     it through the backward recompute regions, where plain propagation loses
     it.
 
-    Fused path (default): ops.fused_attention — online softmax over
-    ``kv_tile``-wide KV tiles, scores never materialized in HBM. With
-    REPRO_DISABLE_KERNELS=1 or out-of-envelope shapes, the scores-
-    materialized path below runs instead (A/B baseline and the GSPMD
-    production dry-run, where XLA owns the fusion).
+    Fused path (default): ``dist.sharded_attention`` — the kernel-side
+    sharding hook (core/dist.py). LocalDist/ShardMapDist call
+    ops.fused_attention on the (already local) block; GspmdDist shard_maps
+    the kernel over (batch_axes, 'model') so each device runs it on its
+    local (B_loc, G_loc, S, H, D) shard with the gathered bias replicated —
+    the production path executes the fused kernel instead of falling back.
+    With REPRO_DISABLE_KERNELS=1, out-of-envelope shapes, or a group dim
+    that doesn't divide the mesh, the scores-materialized path below runs
+    instead (A/B baseline; it never merges the (B, G) dims either).
 
     chunk > 0: the paper-§V.C chunking technique — G processed in sequential
     chunks, capping the attention transient at (B, chunk, H, S, *). Inference
@@ -195,22 +200,32 @@ def _gated_attention(p_attn, x_n, bias, key_mask, dims: AttnDims,
         hd = q.shape[-1]
         scale = 1.0 / (hd**0.5)
         mask = None
+        bias_w = bias
+        if bias_w is not None:
+            # Duality-Async window: fence the gathered pair bias with the QKV
+            # projection so the gather cannot sink past the independent GEMMs
+            # to its consumer below (core/duality.py).
+            bias_w, q = duality.overlap_window(bias_w, q)
         if mask_c is not None:
             mask = jnp.where(mask_c > 0, 0.0, NEG_INF).astype(jnp.float32)
-        if ops.fused_attention_supported(q.shape, kv_len=k.shape[2],
-                                         dtype=q.dtype):
+        if (ops.fused_attention_supported(q.shape, kv_len=k.shape[2],
+                                          dtype=q.dtype)
+                and dist.sharded_attention_supported(q.shape)):
             spec = ("b", "m", None, None, None)
             q = dist.constrain(q, spec)
             k = dist.constrain(k, spec)
             v = dist.constrain(v, spec)
-            ctx = ops.fused_attention(q, k, v, bias=bias, mask=mask,
-                                      scale=scale, kv_tile=kv_tile)
+            ctx = dist.sharded_attention(q, k, v, bias=bias_w, mask=mask,
+                                         scale=scale, kv_tile=kv_tile)
             ctx = dist.constrain(ctx, spec)
         else:
             scores = jnp.einsum("bgihd,bgjhd->bghij", q, k)
             scores = dist.constrain(scores, ("b", "m", None, None, None))
-            probs = ops.fused_softmax(scores, bias=bias, mask=mask,
-                                      scale=scale)
+            # allow_flatten: under GspmdDist the (B, G) dims are mesh-sharded
+            # GLOBAL dims — the softmax must not merge them even on TPU.
+            probs = ops.fused_softmax(scores, bias=bias_w, mask=mask,
+                                      scale=scale,
+                                      allow_flatten=dist.local_tensors)
             probs = dist.constrain(probs, ("b", "m", None, None, None))
             ctx = jnp.einsum("bghij,bgjhd->bgihd", probs, v)
         return output_proj(p_attn, ctx, x_for_gate=x_c)
@@ -288,6 +303,9 @@ def outer_product_mean(p, msa, msa_mask, dist, cfg: EvoformerConfig):
     b_full = dist.all_gather(bproj, axis=2)       # (B, s, r, c)
     b_full = dist.constrain(b_full, ("b", None, None, None))
     mask_full = dist.all_gather(msa_mask, axis=2)  # (B, s, r)
+    # Duality-Async window: keep the left-projection operand inside the
+    # gather's launch->use window (it is independent of the gather).
+    b_full, a = duality.overlap_window(b_full, a)
 
     def opm_block(b_blk, mask_blk):
         o = jnp.einsum("bsic,bsjd->bijcd", a, b_blk)  # (B, r/N, jc, c, c)
@@ -329,6 +347,9 @@ def triangle_mult_core(p, z_in_proj_src, z_gate_src, pair_mask_loc, dist,
     a, bm = jnp.split(ab, 2, axis=-1)
     b_full = dist.all_gather(bm, axis=1)           # (B, r, k, c) gather rows
     b_full = dist.constrain(b_full, ("b", None, None, None))
+    # Duality-Async window: fence the a-side operand with the gather so the
+    # triangular gather is not free to sink to the einsum below.
+    b_full, a = duality.overlap_window(b_full, a)
     o = jnp.einsum("bikc,bjkc->bijc", a, b_full)   # (B, p/N, r, c)
     return dense(p["out"], layer_norm(p["ln_out"], o))
 
@@ -455,6 +476,12 @@ def evoformer_block(
         transition(params["pair_trans"]["mlp"],
                    layer_norm(params["pair_trans"]["ln"], pair)),
         pair, 0.0, None, 0, train)
+    # Duality-Async window (paper §IV.C): the swap-back all_to_all above is
+    # consumed only at the *next* block's row attention. Fencing its result
+    # with the finished pair stack pins the collective inside this block —
+    # the scheduler may start it as early as OPM allows but cannot sink it
+    # into the next block's body past the overlap-eligible pair compute.
+    msa, pair = duality.overlap_window(msa, pair)
     return msa, pair
 
 

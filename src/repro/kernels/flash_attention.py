@@ -1,12 +1,24 @@
-"""Fused flash-style gated-attention forward Pallas TPU kernel.
+"""Fused flash-style gated-attention Pallas TPU kernels (forward + backward).
 
-Computes ``out = softmax(scale * q @ k^T + bias + mask) @ v`` with an online
+Forward: ``out = softmax(scale * q @ k^T + bias + mask) @ v`` with an online
 softmax over KV tiles: the scores tile lives only in VMEM, so the
 ``(N, H, R, R)`` scores tensor the paper's §III.B identifies as the cubic
 ``N_r^3 * H`` memory transient never reaches HBM. HBM traffic per q tile is
 linear in the KV tile size instead of quadratic in sequence length — the
 fused-attention gap ScaleFold (arXiv 2404.11068) closes on top of FastFold's
 kernel set.
+
+Backward (``flash_attention_bwd_pallas``): recompute-style flash backward
+from the saved ``(q, k, v, out->delta, lse)`` residuals — the probs/ds tiles
+are rebuilt per (q_tile, kv_tile) cell in VMEM, so the fp32
+``(N, H, Sq, kv_block)`` recompute transient the jnp KV-scan backward streams
+through HBM never materializes. Three sweeps (dq; dk/dv + the mask
+reduction; the bias reduction), each a separate grid ordered so its
+accumulator lives in VMEM scratch across the innermost dimension.
+
+An XLA-native forward with identical semantics (``flash_attention_xla``,
+lax.scan over KV tiles) serves as the non-TPU leg: interpret-mode Pallas is a
+per-grid-cell loop, ~2x the jnp online-softmax path on CPU smoke shapes.
 
 Kernel contract (enforced/prepared by ops.fused_attention):
 
@@ -175,3 +187,436 @@ def flash_attention_pallas(
         ],
         interpret=interpret,
     )(*operands)
+
+
+# ---------------------------------------------------------------------------
+# XLA-native forward (non-TPU leg). Same math, same residuals.
+# ---------------------------------------------------------------------------
+
+
+def stage_kv_blocks(k, v, bias, mask, kv_tile: int) -> dict:
+    """Shared KV-tile staging for the lax.scan legs (XLA-native forward and
+    the jnp recompute backward in ops._attn_bwd): pad Skv to a kv_tile
+    multiple and reshape into per-tile scan blocks. Padded columns carry a
+    NEG_INF additive mask so recomputed probs are exactly zero there.
+
+    k, v (N, Skv, H, D); bias (B, H, Sq, Skv) or None; mask (N, Skv) fp32 or
+    None. Returns xs with leading dim nkv: 'k'/'v' (nkv, N, kvb, H, D),
+    'b' (nkv, B, H, Sq, kvb) if bias, 'm' (nkv, N, kvb) if mask or padding.
+    """
+    n, skv, h, d = k.shape
+    nkv = -(-skv // kv_tile)
+    skv_pad = nkv * kv_tile
+    kp = jnp.pad(k, ((0, 0), (0, skv_pad - skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, skv_pad - skv), (0, 0), (0, 0)))
+    mcomb = None
+    if mask is not None:
+        mcomb = jnp.pad(mask.astype(jnp.float32),
+                        ((0, 0), (0, skv_pad - skv)),
+                        constant_values=NEG_INF)
+    elif skv_pad != skv:
+        col = jnp.arange(skv_pad)
+        mcomb = jnp.broadcast_to(
+            jnp.where(col < skv, 0.0, NEG_INF)[None, :], (n, skv_pad))
+    xs = {
+        "k": kp.reshape(n, nkv, kv_tile, h, d).swapaxes(0, 1),
+        "v": vp.reshape(n, nkv, kv_tile, h, v.shape[-1]).swapaxes(0, 1),
+    }
+    if bias is not None:
+        nb, _, sq, _ = bias.shape
+        bp = jnp.pad(bias, ((0, 0), (0, 0), (0, 0), (0, skv_pad - skv)))
+        xs["b"] = bp.reshape(nb, h, sq, nkv, kv_tile).transpose(3, 0, 1, 2, 4)
+    if mcomb is not None:
+        xs["m"] = mcomb.reshape(n, nkv, kv_tile).swapaxes(0, 1)
+    return xs
+
+
+def apply_block_bias_mask(s, blk, n: int):
+    """Add a staged bias/mask block to a scores block s (N, H, Sq, kvb): the
+    bias is shared by N/B consecutive rows (Evoformer bias-group contract)."""
+    if "b" in blk:
+        nb = blk["b"].shape[0]
+        s = s.reshape((nb, n // nb) + s.shape[1:])
+        s = s + blk["b"].astype(jnp.float32)[:, None]
+        s = s.reshape((n,) + s.shape[2:])
+    if "m" in blk:
+        s = s + blk["m"][:, None, None, :]
+    return s
+
+
+def flash_attention_xla(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    bias: jax.Array | None = None,
+    mask: jax.Array | None = None,
+    *,
+    scale: float,
+    kv_tile: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Online-softmax attention as a lax.scan over KV tiles — no Pallas.
+
+    Layout matches ops.fused_attention (NOT the kernel): q (N, Sq, H, D);
+    k, v (N, Skv, H, D); bias (B, H, Sq, Skv) with N % B == 0; mask (N, Skv)
+    additive fp32. Returns (out (N, Sq, H, D) in q.dtype, lse (N, H, Sq) fp32)
+    — the same residual contract as the Pallas kernel, so the recompute
+    backward is shared. Used when ``jax.default_backend() != "tpu"``: the
+    memory behavior (peak transient = one fp32 (N, H, Sq, kv_tile) block) is
+    the same; XLA owns the fusion instead of Mosaic.
+    """
+    n, sq, h, d = q.shape
+    skv = k.shape[1]
+    kvb = min(kv_tile, skv)
+    xs = stage_kv_blocks(k, v, bias, mask, kvb)
+
+    def kv_step(carry, blk):
+        m, l, acc = carry
+        s = jnp.einsum("nqhd,nkhd->nhqk", q, blk["k"],
+                       preferred_element_type=jnp.float32) * scale
+        s = apply_block_bias_mask(s, blk, n)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "nhqk,nkhd->nhqd", p, blk["v"].astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((n, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((n, h, sq), jnp.float32)
+    a0 = jnp.zeros((n, h, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), xs)
+    l = jnp.maximum(l, 1e-30)
+    out = (acc / l[..., None]).swapaxes(1, 2).astype(q.dtype)
+    lse = m + jnp.log(l)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# Fused backward kernels
+# ---------------------------------------------------------------------------
+#
+# ds recompute shared by all three sweeps: rebuild the scores tile from
+# (q, k, bias, mask), the probs tile from lse, and d(logits) from
+# (do, v, delta) — all in VMEM, fp32.
+
+
+def _recompute_ds(q, k, v, do, lse, delta, b_blk, m_blk, *, scale, kv_len,
+                  kv_tile, jk):
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                          # (q_tile, kv_tile)
+    if b_blk is not None:
+        s = s + b_blk.astype(jnp.float32)
+    if m_blk is not None:
+        s = s + m_blk.astype(jnp.float32)[None, :]
+    col = jk * kv_tile + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(col < kv_len, s, NEG_INF)
+    p = jnp.exp(s - lse[:, None])                      # (q_tile, kv_tile)
+    dp = jax.lax.dot_general(
+        do, v, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                  # (q_tile, kv_tile)
+    ds = p * (dp - delta[:, None])
+    return p, ds
+
+
+def _bwd_dq_kernel(*refs, scale, kv_len, kv_tile, has_bias, has_mask):
+    idx = 0
+    q_ref = refs[idx]; idx += 1
+    k_ref = refs[idx]; idx += 1
+    v_ref = refs[idx]; idx += 1
+    do_ref = refs[idx]; idx += 1
+    lse_ref = refs[idx]; idx += 1
+    dl_ref = refs[idx]; idx += 1
+    b_ref = refs[idx] if has_bias else None
+    idx += int(has_bias)
+    mk_ref = refs[idx] if has_mask else None
+    idx += int(has_mask)
+    dq_ref, dq_acc = refs[idx], refs[idx + 1]
+
+    jk = pl.program_id(3)
+    n_kv = pl.num_programs(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    _, ds = _recompute_ds(
+        q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], do_ref[0, 0],
+        lse_ref[0, 0], dl_ref[0, 0],
+        b_ref[0, 0] if b_ref is not None else None,
+        mk_ref[0] if mk_ref is not None else None,
+        scale=scale, kv_len=kv_len, kv_tile=kv_tile, jk=jk)
+    dq_acc[...] += jax.lax.dot_general(
+        ds, k_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale
+
+    @pl.when(jk == n_kv - 1)
+    def _epilogue():
+        dq_ref[0, 0] = dq_acc[...]
+
+
+def _bwd_dkv_kernel(*refs, scale, kv_len, kv_tile, has_bias, has_mask):
+    idx = 0
+    q_ref = refs[idx]; idx += 1
+    k_ref = refs[idx]; idx += 1
+    v_ref = refs[idx]; idx += 1
+    do_ref = refs[idx]; idx += 1
+    lse_ref = refs[idx]; idx += 1
+    dl_ref = refs[idx]; idx += 1
+    b_ref = refs[idx] if has_bias else None
+    idx += int(has_bias)
+    mk_ref = refs[idx] if has_mask else None
+    idx += int(has_mask)
+    dk_ref, dv_ref = refs[idx], refs[idx + 1]
+    idx += 2
+    dm_ref = refs[idx] if has_mask else None
+    idx += int(has_mask)
+    dk_acc, dv_acc = refs[idx], refs[idx + 1]
+    dm_acc = refs[idx + 2] if has_mask else None
+
+    iq = pl.program_id(3)
+    n_q = pl.num_programs(3)
+    jk = pl.program_id(2)
+
+    @pl.when(iq == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+        if dm_acc is not None:
+            dm_acc[...] = jnp.zeros_like(dm_acc)
+
+    p, ds = _recompute_ds(
+        q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], do_ref[0, 0],
+        lse_ref[0, 0], dl_ref[0, 0],
+        b_ref[0, 0] if b_ref is not None else None,
+        mk_ref[0] if mk_ref is not None else None,
+        scale=scale, kv_len=kv_len, kv_tile=kv_tile, jk=jk)
+    dv_acc[...] += jax.lax.dot_general(
+        p, do_ref[0, 0].astype(jnp.float32), (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                  # (kv_tile, d)
+    dk_acc[...] += jax.lax.dot_general(
+        ds, q_ref[0, 0].astype(jnp.float32), (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    if dm_acc is not None:
+        dm_acc[...] += jnp.broadcast_to(
+            jnp.sum(ds, axis=0, keepdims=True), dm_acc.shape)
+
+    @pl.when(iq == n_q - 1)
+    def _epilogue():
+        dk_ref[0, 0] = dk_acc[...]
+        dv_ref[0, 0] = dv_acc[...]
+        if dm_ref is not None:
+            dm_ref[0, 0, :] = dm_acc[0, :]
+
+
+def _bwd_dbias_kernel(*refs, scale, kv_len, kv_tile, has_mask):
+    idx = 0
+    q_ref = refs[idx]; idx += 1
+    k_ref = refs[idx]; idx += 1
+    v_ref = refs[idx]; idx += 1
+    do_ref = refs[idx]; idx += 1
+    lse_ref = refs[idx]; idx += 1
+    dl_ref = refs[idx]; idx += 1
+    b_ref = refs[idx]; idx += 1
+    mk_ref = refs[idx] if has_mask else None
+    idx += int(has_mask)
+    db_ref, db_acc = refs[idx], refs[idx + 1]
+
+    r = pl.program_id(4)
+    rep = pl.num_programs(4)
+    jk = pl.program_id(3)
+
+    @pl.when(r == 0)
+    def _init():
+        db_acc[...] = jnp.zeros_like(db_acc)
+
+    _, ds = _recompute_ds(
+        q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], do_ref[0, 0],
+        lse_ref[0, 0], dl_ref[0, 0], b_ref[0, 0],
+        mk_ref[0] if mk_ref is not None else None,
+        scale=scale, kv_len=kv_len, kv_tile=kv_tile, jk=jk)
+    db_acc[...] += ds
+
+    @pl.when(r == rep - 1)
+    def _epilogue():
+        db_ref[0, 0] = db_acc[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "kv_len", "q_tile", "kv_tile", "has_bias",
+                     "has_mask", "interpret"),
+)
+def flash_attention_bwd_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    do: jax.Array,
+    lse: jax.Array,
+    delta: jax.Array,
+    bias: jax.Array | None = None,
+    mask: jax.Array | None = None,
+    *,
+    scale: float,
+    kv_len: int,
+    q_tile: int,
+    kv_tile: int,
+    has_bias: bool = False,
+    has_mask: bool = False,
+    interpret: bool = False,
+):
+    """Fused flash-attention backward. Pre-padded kernel layout, like the
+    forward: q/k/v/do (N, H, S, D) with D a 128-lane multiple and S padded to
+    the q/kv tile (zero rows/cols); lse and delta ( = rowsum(dO * O), fp32 )
+    are (N, H, Sq) padded with zeros. Zero-padded dO rows make every padded
+    contribution vanish (ds = p * (dp - delta) = 0), and padded KV columns
+    are re-masked to NEG_INF in-kernel exactly as in the forward.
+
+    Returns fp32 (dq (N, H, Sq, D), dk, dv (N, H, Skv, D),
+    dbias (B, H, Sq, Skv) | None, dmask_h (N, H, Skv) | None). dmask_h is the
+    per-head mask reduction (sum over q of ds) — callers sum over H. Three
+    grid sweeps recompute the ds tile in VMEM (dq: KV-innermost; dk/dv + mask
+    reduction: q-innermost; bias reduction: bias-group-innermost so the
+    (q_tile, kv_tile) accumulator can live in scratch).
+    """
+    n, h, sq, d = q.shape
+    skv = k.shape[2]
+    assert sq % q_tile == 0 and skv % kv_tile == 0 and d % LANE == 0, \
+        (q.shape, k.shape, q_tile, kv_tile)
+    nq, nkv = sq // q_tile, skv // kv_tile
+
+    def specs4(ixmap):
+        return pl.BlockSpec((1, 1, q_tile, d), ixmap)
+
+    def qkv_specs(iq_of, jk_of):
+        # q/do + lse/delta blocks at the q-tile index, k/v at the kv index.
+        return [
+            pl.BlockSpec((1, 1, q_tile, d),
+                         lambda *g: (g[0], g[1], iq_of(g), 0)),
+            pl.BlockSpec((1, 1, kv_tile, d),
+                         lambda *g: (g[0], g[1], jk_of(g), 0)),
+            pl.BlockSpec((1, 1, kv_tile, d),
+                         lambda *g: (g[0], g[1], jk_of(g), 0)),
+            pl.BlockSpec((1, 1, q_tile, d),
+                         lambda *g: (g[0], g[1], iq_of(g), 0)),
+            pl.BlockSpec((1, 1, q_tile),
+                         lambda *g: (g[0], g[1], iq_of(g))),
+            pl.BlockSpec((1, 1, q_tile),
+                         lambda *g: (g[0], g[1], iq_of(g))),
+        ]
+
+    rep = 1
+    if has_bias:
+        assert bias is not None and bias.ndim == 4 and n % bias.shape[0] == 0
+        rep = n // bias.shape[0]
+
+    base_ops = [q, k, v, do, lse, delta]
+
+    # --- sweep 1: dq, grid (N, H, nq, nkv), KV innermost ---
+    in_specs = qkv_specs(lambda g: g[2], lambda g: g[3])
+    operands = list(base_ops)
+    if has_bias:
+        in_specs.append(pl.BlockSpec(
+            (1, 1, q_tile, kv_tile),
+            lambda i, j, iq, jk: (i // rep, j, iq, jk)))
+        operands.append(bias)
+    if has_mask:
+        assert mask is not None and mask.shape == (n, skv)
+        in_specs.append(pl.BlockSpec((1, kv_tile),
+                                     lambda i, j, iq, jk: (i, jk)))
+        operands.append(mask)
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, scale=scale, kv_len=kv_len,
+                          kv_tile=kv_tile, has_bias=has_bias,
+                          has_mask=has_mask),
+        grid=(n, h, nq, nkv),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, q_tile, d),
+                               lambda i, j, iq, jk: (i, j, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h, sq, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((q_tile, d), jnp.float32)],
+        interpret=interpret,
+    )(*operands)
+
+    # --- sweep 2: dk/dv (+ mask reduction), grid (N, H, nkv, nq), q inner ---
+    in_specs = qkv_specs(lambda g: g[3], lambda g: g[2])
+    operands = list(base_ops)
+    if has_bias:
+        in_specs.append(pl.BlockSpec(
+            (1, 1, q_tile, kv_tile),
+            lambda i, j, jk, iq: (i // rep, j, iq, jk)))
+        operands.append(bias)
+    if has_mask:
+        in_specs.append(pl.BlockSpec((1, kv_tile),
+                                     lambda i, j, jk, iq: (i, jk)))
+        operands.append(mask)
+    kv_spec = pl.BlockSpec((1, 1, kv_tile, d),
+                           lambda i, j, jk, iq: (i, j, jk, 0))
+    out_specs = [kv_spec, kv_spec]
+    out_shape = [jax.ShapeDtypeStruct((n, h, skv, d), jnp.float32),
+                 jax.ShapeDtypeStruct((n, h, skv, d), jnp.float32)]
+    scratch = [pltpu.VMEM((kv_tile, d), jnp.float32),
+               pltpu.VMEM((kv_tile, d), jnp.float32)]
+    if has_mask:
+        out_specs.append(pl.BlockSpec((1, 1, kv_tile),
+                                      lambda i, j, jk, iq: (i, j, jk)))
+        out_shape.append(jax.ShapeDtypeStruct((n, h, skv), jnp.float32))
+        scratch.append(pltpu.VMEM((8, kv_tile), jnp.float32))
+    outs = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, scale=scale, kv_len=kv_len,
+                          kv_tile=kv_tile, has_bias=has_bias,
+                          has_mask=has_mask),
+        grid=(n, h, nkv, nq),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(*operands)
+    dk, dv = outs[0], outs[1]
+    dmask_h = outs[2] if has_mask else None
+
+    # --- sweep 3: dbias, grid (B, H, nq, nkv, rep), bias group innermost ---
+    dbias = None
+    if has_bias:
+        nb = bias.shape[0]
+        in_specs = [
+            pl.BlockSpec((1, 1, q_tile, d),
+                         lambda b, j, iq, jk, r: (b * rep + r, j, iq, 0)),
+            pl.BlockSpec((1, 1, kv_tile, d),
+                         lambda b, j, iq, jk, r: (b * rep + r, j, jk, 0)),
+            pl.BlockSpec((1, 1, kv_tile, d),
+                         lambda b, j, iq, jk, r: (b * rep + r, j, jk, 0)),
+            pl.BlockSpec((1, 1, q_tile, d),
+                         lambda b, j, iq, jk, r: (b * rep + r, j, iq, 0)),
+            pl.BlockSpec((1, 1, q_tile),
+                         lambda b, j, iq, jk, r: (b * rep + r, j, iq)),
+            pl.BlockSpec((1, 1, q_tile),
+                         lambda b, j, iq, jk, r: (b * rep + r, j, iq)),
+            pl.BlockSpec((1, 1, q_tile, kv_tile),
+                         lambda b, j, iq, jk, r: (b, j, iq, jk)),
+        ]
+        operands = list(base_ops) + [bias]
+        if has_mask:
+            in_specs.append(pl.BlockSpec(
+                (1, kv_tile), lambda b, j, iq, jk, r: (b * rep + r, jk)))
+            operands.append(mask)
+        dbias = pl.pallas_call(
+            functools.partial(_bwd_dbias_kernel, scale=scale, kv_len=kv_len,
+                              kv_tile=kv_tile, has_mask=has_mask),
+            grid=(nb, h, nq, nkv, rep),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, 1, q_tile, kv_tile),
+                                   lambda b, j, iq, jk, r: (b, j, iq, jk)),
+            out_shape=jax.ShapeDtypeStruct((nb, h, sq, skv), jnp.float32),
+            scratch_shapes=[pltpu.VMEM((q_tile, kv_tile), jnp.float32)],
+            interpret=interpret,
+        )(*operands)
+
+    return dq, dk, dv, dbias, dmask_h

@@ -2,18 +2,21 @@
 
 Each op:
   * reshapes arbitrary leading dims down to the kernel's canonical layout,
-  * runs the Pallas kernel forward (interpret=True automatically on CPU — TPU
-    is the *target*, CPU interpret mode is the validation vehicle),
-  * carries a ``jax.custom_vjp`` whose backward is the analytic gradient in
-    plain jnp (memory-bound element-wise math that XLA fuses; on TPU these
-    could be promoted to Pallas backward kernels — forward fusion is where
-    the paper's win is),
+  * runs the Pallas kernel on TPU (the target); on other backends it runs an
+    XLA-native leg with identical semantics (the jnp oracle for the
+    element-wise/softmax/LN ops, the online-softmax lax.scan for fused
+    attention) — interpret-mode Pallas is a per-grid-cell loop that only runs
+    when ``REPRO_PALLAS_INTERPRET=1`` (the kernel-validation CI leg),
+  * carries a ``jax.custom_vjp``: fused attention pairs the forward with the
+    fused Pallas backward (``flash_attention_bwd_pallas``) on the Pallas leg
+    and with the jnp KV-scan recompute backward elsewhere; the remaining ops
+    use analytic jnp backwards that XLA fuses,
   * falls back to the pure-jnp oracle (ref.py) when the shape is outside the
     kernel envelope or kernels are globally disabled.
 
 Toggle: set REPRO_DISABLE_KERNELS=1 (or flip ``KERNELS_ENABLED``) to force
-oracle paths everywhere — used by A/B tests and by the production-mesh
-dry-run, where XLA fuses these patterns natively.
+oracle paths everywhere — used by A/B tests (the scores-materialized
+attention baseline in the Evoformer rides this toggle too).
 """
 from __future__ import annotations
 
@@ -33,6 +36,10 @@ from repro.kernels.layer_norm import layer_norm_pallas
 
 KERNELS_ENABLED = os.environ.get("REPRO_DISABLE_KERNELS", "0") != "1"
 
+# Benchmarks flip this to force the jnp KV-scan backward for fused attention
+# even when the Pallas leg is active (backward-kernel A/B).
+FORCE_SCAN_ATTN_BWD = False
+
 # Kernel envelope: last-dim sizes beyond this would blow the VMEM tile budget
 # on the v5e target (ROW_TILE rows * C * 4 B fp32 + headroom in ~16 MB VMEM).
 _MAX_SOFTMAX_C = 16384
@@ -43,6 +50,18 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _pallas_enabled() -> bool:
+    """Whether ops execute their Pallas kernels. True on TPU (the target);
+    on other backends only when REPRO_PALLAS_INTERPRET=1 (interpret mode, the
+    kernel-validation leg) — otherwise each op's XLA-native leg runs, which
+    is both faster on CPU and safe to lower inside large SPMD dry-runs."""
+    if not KERNELS_ENABLED:
+        return False
+    if jax.default_backend() == "tpu":
+        return True
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+
+
 # ---------------------------------------------------------------------------
 # fused softmax
 # ---------------------------------------------------------------------------
@@ -50,7 +69,7 @@ def _interpret() -> bool:
 
 def _softmax_impl(scale, has_bias, has_mask, x, bias, mask):
     n, h, r, c = x.shape
-    if not KERNELS_ENABLED or c > _MAX_SOFTMAX_C:
+    if not _pallas_enabled() or c > _MAX_SOFTMAX_C:
         return ref.softmax_ref(x, bias if has_bias else None,
                                mask if has_mask else None, scale)
     return fused_softmax_pallas(
@@ -97,6 +116,8 @@ def fused_softmax(
     bias: jax.Array | None = None,
     mask: jax.Array | None = None,
     scale: float = 1.0,
+    *,
+    allow_flatten: bool = True,
 ) -> jax.Array:
     """softmax(scale*x + bias + mask) over the last axis.
 
@@ -106,12 +127,15 @@ def fused_softmax(
     mask: additive, shape (..., C) matching x's leading dims, or None.
 
     5D form (group attention, Evoformer): x (B, G, H, R, C) with bias
-    (B, H, R, C) shared across G and mask (B, G, C). When the Pallas path is
-    disabled (production dry-run), this form computes WITHOUT flattening —
-    reshaping (B, G) together would merge two mesh-sharded dims and force
-    GSPMD to all-gather the whole representation (§Perf alphafold iter 3).
+    (B, H, R, C) shared across G and mask (B, G, C). When the Pallas leg is
+    inactive — or the caller passes ``allow_flatten=False`` because the
+    (B, G) dims are mesh-sharded GLOBAL dims (GspmdDist) — this form
+    computes WITHOUT flattening: reshaping (B, G) together would merge two
+    mesh-sharded dims and force GSPMD to all-gather the whole representation
+    (§Perf alphafold iter 3).
     """
-    if x.ndim == 5 and not (KERNELS_ENABLED and x.shape[-1] <= _MAX_SOFTMAX_C):
+    if x.ndim == 5 and not (allow_flatten and _pallas_enabled()
+                            and x.shape[-1] <= _MAX_SOFTMAX_C):
         acc = x.astype(jnp.float32) * scale
         if bias is not None:
             acc = acc + bias.astype(jnp.float32)[:, None]
@@ -147,9 +171,13 @@ _DEFAULT_KV_TILE = 512   # forward KV tile / backward recompute block default
 
 def fused_attention_supported(q_shape, kv_len: int | None = None,
                               dtype=None) -> bool:
-    """True when ops.fused_attention will take the Pallas flash path for this
-    shape — callers keeping a scores-materialized A/B path (evoformer's
-    ``REPRO_DISABLE_KERNELS`` toggle) branch on this. q_shape is the 4D
+    """True when ops.fused_attention will take the fused flash path (the
+    Pallas kernel on TPU, the XLA-native online-softmax leg elsewhere) for
+    this shape — callers keeping a scores-materialized A/B path (evoformer's
+    ``REPRO_DISABLE_KERNELS`` toggle) branch on this. The same envelope
+    gates the fused Pallas *backward* (``ops._attn_bwd``): forward and
+    backward always agree on which leg owns a shape, so the saved
+    (q, k, v, out, lse) residuals are interchangeable. q_shape is the 4D
     (N, Sq, H, D) or 5D (B, G, S, H, D) query shape."""
     if not KERNELS_ENABLED:
         return False
@@ -172,6 +200,40 @@ def _attn_tiles(sq: int, skv: int, d: int, kv_tile: int):
     return q_tile, kv, d_pad
 
 
+def _pad_nhsd(x, s_to: int, d_to: int):
+    """Zero-pad a (N, H, S, D) kernel-layout tensor to (N, H, s_to, d_to)."""
+    _, _, ss, dd = x.shape
+    if ss == s_to and dd == d_to:
+        return x
+    return jnp.pad(x, ((0, 0), (0, 0), (0, s_to - ss), (0, d_to - dd)))
+
+
+def _attn_stage_padded(kv_tile, q, k, v, bias, mask):
+    """Shared fwd/bwd staging into the padded Pallas kernel layout — one
+    source of truth so the backward kernel always sees tiles padded under
+    the same rules as the forward that saved its residuals. Returns
+    (qt, kt, vt, bt, mt, q_tile, kv_t, sq_pad, skv_pad) with q/k/v
+    transposed to (N, H, S, D) and S/D padded to the tile grid."""
+    from repro.kernels.flash_attention import _pad_to
+
+    n, sq, h, d = q.shape
+    skv = k.shape[1]
+    q_tile, kv_t, d_pad = _attn_tiles(sq, skv, d, kv_tile)
+    sq_pad = _pad_to(sq, q_tile)
+    skv_pad = _pad_to(skv, kv_t)
+    qt = _pad_nhsd(q.transpose(0, 2, 1, 3), sq_pad, d_pad)
+    kt = _pad_nhsd(k.transpose(0, 2, 1, 3), skv_pad, d_pad)
+    vt = _pad_nhsd(v.transpose(0, 2, 1, 3), skv_pad, d_pad)
+    bt = None
+    if bias is not None:
+        bt = jnp.pad(bias, ((0, 0), (0, 0), (0, sq_pad - sq),
+                            (0, skv_pad - skv)))
+    mt = None
+    if mask is not None:
+        mt = jnp.pad(mask, ((0, 0), (0, skv_pad - skv)))
+    return qt, kt, vt, bt, mt, q_tile, kv_t, sq_pad, skv_pad
+
+
 def _attn_fwd_impl(scale, has_bias, has_mask, kv_tile, q, k, v, bias, mask):
     """Returns (out (N, Sq, H, D), lse (N, H, Sq))."""
     n, sq, h, d = q.shape
@@ -180,28 +242,19 @@ def _attn_fwd_impl(scale, has_bias, has_mask, kv_tile, q, k, v, bias, mask):
     mask = mask if has_mask else None
     if not fused_attention_supported(q.shape, kv_len=skv, dtype=q.dtype):
         return ref.attention_ref(q, k, v, bias, mask, scale)
-    from repro.kernels.flash_attention import _pad_to, flash_attention_pallas
+    if not _pallas_enabled():
+        # XLA-native online-softmax leg (non-TPU backends): same math, same
+        # (out, lse) residuals, lax.scan over KV tiles instead of the kernel
+        # grid — interpret-mode Pallas is ~2x this path on CPU smoke shapes.
+        from repro.kernels.flash_attention import flash_attention_xla
 
-    q_tile, kv_t, d_pad = _attn_tiles(sq, skv, d, kv_tile)
-    sq_pad = _pad_to(sq, q_tile)
-    skv_pad = _pad_to(skv, kv_t)
+        kvb = min(kv_tile or _DEFAULT_KV_TILE, skv)
+        return flash_attention_xla(q, k, v, bias, mask, scale=scale,
+                                   kv_tile=kvb)
+    from repro.kernels.flash_attention import flash_attention_pallas
 
-    def pad4(x, s_to):  # (N, H, S, D) -> padded S/D
-        _, _, s, dd = x.shape
-        if s == s_to and dd == d_pad:
-            return x
-        return jnp.pad(x, ((0, 0), (0, 0), (0, s_to - s), (0, d_pad - dd)))
-
-    qt = pad4(q.transpose(0, 2, 1, 3), sq_pad)
-    kt = pad4(k.transpose(0, 2, 1, 3), skv_pad)
-    vt = pad4(v.transpose(0, 2, 1, 3), skv_pad)
-    bt = None
-    if bias is not None:
-        bt = jnp.pad(bias, ((0, 0), (0, 0), (0, sq_pad - sq),
-                            (0, skv_pad - skv)))
-    mt = None
-    if mask is not None:
-        mt = jnp.pad(mask, ((0, 0), (0, skv_pad - skv)))
+    qt, kt, vt, bt, mt, q_tile, kv_t, sq_pad, skv_pad = _attn_stage_padded(
+        kv_tile, q, k, v, bias, mask)
     out, lse = flash_attention_pallas(
         qt, kt, vt, bt, mt, scale=scale, kv_len=skv, q_tile=q_tile,
         kv_tile=kv_t, has_bias=bias is not None, has_mask=mask is not None,
@@ -225,41 +278,63 @@ def _attn_fwd(scale, has_bias, has_mask, kv_tile, q, k, v, bias, mask):
     return out, (q, k, v, bias, mask, out, lse)
 
 
-def _attn_bwd(scale, has_bias, has_mask, kv_tile, res, g):
-    """Recompute backward: scan over KV blocks, rebuilding the probs block
-    from (q, k, lse) — peak transient is (N, H, Sq, kv_block), never the full
-    scores tensor (mirrors layers/attention._flash_bwd, plus bias/mask)."""
+def _attn_bwd_pallas(scale, has_bias, has_mask, kv_tile, res, g):
+    """Fused Pallas backward: dq/dk/dv (and the bias/mask reductions) are
+    computed tile-by-tile in VMEM by flash_attention_bwd_pallas from the
+    saved (q, k, v, out, lse) — the fp32 (N, H, Sq, kv_block) recompute
+    transient of the jnp KV-scan backward never reaches HBM. Same envelope
+    as the forward kernel; the scan below stays as the oracle leg."""
     q, k, v, bias, mask, out, lse = res
+    n, sq, h, d = q.shape
+    skv = k.shape[1]
+    from repro.kernels.flash_attention import flash_attention_bwd_pallas
+
+    qt, kt, vt, bt, mt, q_tile, kv_t, sq_pad, skv_pad = _attn_stage_padded(
+        kv_tile, q, k, v, bias, mask)
+    gf = g.astype(jnp.float32)
+    delta = jnp.einsum("nqhd,nqhd->nhq", gf, out.astype(jnp.float32))
+    dot = _pad_nhsd(g.astype(q.dtype).transpose(0, 2, 1, 3), sq_pad,
+                    qt.shape[-1])
+    lse_p = jnp.pad(lse, ((0, 0), (0, 0), (0, sq_pad - sq)))
+    delta_p = jnp.pad(delta, ((0, 0), (0, 0), (0, sq_pad - sq)))
+    dq, dk, dv, dbias, dmask_h = flash_attention_bwd_pallas(
+        qt, kt, vt, dot, lse_p, delta_p, bt, mt, scale=scale, kv_len=skv,
+        q_tile=q_tile, kv_tile=kv_t, has_bias=has_bias, has_mask=has_mask,
+        interpret=_interpret(),
+    )
+    dq = dq[:, :, :sq, :d].transpose(0, 2, 1, 3).astype(q.dtype)
+    dk = dk[:, :, :skv, :d].transpose(0, 2, 1, 3).astype(k.dtype)
+    dv = dv[:, :, :skv, :d].transpose(0, 2, 1, 3).astype(v.dtype)
+    db = None
+    if has_bias:
+        db = dbias[:, :, :sq, :skv].astype(bias.dtype)
+    dm = None
+    if has_mask:
+        dm = dmask_h.sum(axis=1)[:, :skv].astype(mask.dtype)
+    return dq, dk, dv, db, dm
+
+
+def _attn_bwd(scale, has_bias, has_mask, kv_tile, res, g):
+    """Recompute backward. On the Pallas leg (TPU, or forced interpret) and
+    in-envelope shapes: the fused flash_attention_bwd_pallas kernel. Oracle
+    leg: scan over KV blocks, rebuilding the probs block from (q, k, lse) —
+    peak transient is (N, H, Sq, kv_block), never the full scores tensor
+    (mirrors layers/attention._flash_bwd, plus bias/mask)."""
+    q, k, v, bias, mask, out, lse = res
+    if (_pallas_enabled() and not FORCE_SCAN_ATTN_BWD
+            and fused_attention_supported(q.shape, kv_len=k.shape[1],
+                                          dtype=q.dtype)):
+        return _attn_bwd_pallas(scale, has_bias, has_mask, kv_tile, res, g)
     n, sq, h, d = q.shape
     skv = k.shape[1]
     kvb = min(kv_tile or _DEFAULT_KV_TILE, skv)
     nkv = -(-skv // kvb)
     skv_pad = nkv * kvb
-    neg = jnp.float32(-1e30)
+    from repro.kernels.flash_attention import (
+        apply_block_bias_mask, stage_kv_blocks)
 
-    kp = jnp.pad(k, ((0, 0), (0, skv_pad - skv), (0, 0), (0, 0)))
-    vp = jnp.pad(v, ((0, 0), (0, skv_pad - skv), (0, 0), (0, 0)))
-    # Combined additive mask: user mask (if any) + NEG_INF on padded columns
-    # so recomputed p is exactly zero there.
-    mcomb = None
-    if has_mask:
-        mcomb = jnp.pad(mask.astype(jnp.float32),
-                        ((0, 0), (0, skv_pad - skv)), constant_values=neg)
-    elif skv_pad != skv:
-        col = jnp.arange(skv_pad)
-        mcomb = jnp.broadcast_to(
-            jnp.where(col < skv, 0.0, neg)[None, :], (n, skv_pad))
-
-    xs = {
-        "k": kp.reshape(n, nkv, kvb, h, d).swapaxes(0, 1),
-        "v": vp.reshape(n, nkv, kvb, h, v.shape[-1]).swapaxes(0, 1),
-    }
-    if has_bias:
-        nb = bias.shape[0]
-        bp = jnp.pad(bias, ((0, 0), (0, 0), (0, 0), (0, skv_pad - skv)))
-        xs["b"] = bp.reshape(nb, h, sq, nkv, kvb).transpose(3, 0, 1, 2, 4)
-    if mcomb is not None:
-        xs["m"] = mcomb.reshape(n, nkv, kvb).swapaxes(0, 1)
+    xs = stage_kv_blocks(k, v, bias if has_bias else None,
+                         mask if has_mask else None, kvb)
 
     gf = g.astype(jnp.float32)
     delta = jnp.einsum("nqhd,nqhd->nhq", gf, out.astype(jnp.float32))
@@ -268,13 +343,7 @@ def _attn_bwd(scale, has_bias, has_mask, kv_tile, res, g):
         k_j, v_j = blk["k"], blk["v"]
         s = jnp.einsum("nqhd,nkhd->nhqk", q, k_j,
                        preferred_element_type=jnp.float32) * scale
-        if "b" in blk:
-            nb = blk["b"].shape[0]
-            s = s.reshape((nb, n // nb) + s.shape[1:])
-            s = s + blk["b"].astype(jnp.float32)[:, None]
-            s = s.reshape((n,) + s.shape[2:])
-        if "m" in blk:
-            s = s + blk["m"][:, None, None, :]
+        s = apply_block_bias_mask(s, blk, n)
         p = jnp.exp(s - lse[..., None])                    # (N, H, Sq, kvb)
         dv_j = jnp.einsum("nhqk,nqhd->nkhd", p, gf)
         dp = jnp.einsum("nqhd,nkhd->nhqk", gf, v_j.astype(jnp.float32))
@@ -328,18 +397,26 @@ def fused_attention(
         N % B == 0 (or (H, Sq, Skv) as B=1); mask (N, Skv) additive fp32.
     5D form (Evoformer group attention): q, k, v (B, G, S, H, D) with bias
         (B, H, S, S) shared across G and mask (B, G, S) additive. The (B, G)
-        dims are flattened for the kernel; callers under GSPMD should prefer
-        the scores-materialized path when kernels are disabled (see
-        fused_attention_supported / evoformer._gated_attention).
+        dims are flattened for the kernel — callers whose (B, G) dims are
+        *mesh-sharded* must hand LOCAL blocks to this function (the
+        ``dist.sharded_attention`` hook in core/dist.py: shard_map under
+        GSPMD), or the flatten merges two sharded dims and forces an
+        all-gather of the whole representation.
 
-    ``scale`` defaults to 1/sqrt(D). ``kv_tile`` (0 = default 512) bounds both
-    the forward KV tile and the backward recompute block — AutoChunk
+    ``scale`` defaults to 1/sqrt(D). ``kv_tile`` (0 = default 512) bounds the
+    forward KV tile and the backward recompute block/tile — AutoChunk
     (repro.memory.autochunk) plans it from the HBM budget.
 
-    custom_vjp: forward saves only (q, k, v, out, lse); backward recomputes
-    the probs per KV block. Mask values must be finite (~-1e9, not -inf).
-    Out-of-envelope shapes and REPRO_DISABLE_KERNELS=1 fall back to the
-    scores-materialized oracle (ref.attention_ref) under the same VJP.
+    custom_vjp: forward saves only (q, k, v, out, lse); the backward rebuilds
+    the probs from them. On the Pallas leg the fused
+    ``flash_attention_bwd_pallas`` kernel computes dq/dk/dv and the
+    bias/mask reductions tile-by-tile in VMEM (same envelope as the forward:
+    D <= 256, Skv <= 16384, fp32/bf16); elsewhere a jnp KV-block scan with a
+    (N, H, Sq, kv_block) fp32 transient is the oracle leg
+    (``FORCE_SCAN_ATTN_BWD`` pins it for A/B). Mask values must be finite
+    (~-1e9, not -inf). Out-of-envelope shapes and REPRO_DISABLE_KERNELS=1
+    fall back to the scores-materialized oracle (ref.attention_ref) under
+    the same VJP.
     """
     d = q.shape[-1]
     assert k.shape[-1] == d and v.shape[-1] == d, (q.shape, k.shape, v.shape)
@@ -367,9 +444,8 @@ def fused_attention(
 
 
 def _ln_impl(eps, x, gamma, beta):
-    c = x.shape[-1]
-    if not KERNELS_ENABLED or c > _MAX_NORM_C:
-        return ref.layer_norm_ref(x, gamma, beta, eps)
+    # The public layer_norm wrapper routes the oracle leg (Pallas inactive /
+    # over-envelope C) before flattening; only the kernel leg reaches here.
     return layer_norm_pallas(x, gamma, beta, eps=eps, interpret=_interpret())
 
 
@@ -408,6 +484,10 @@ def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
                eps: float = 1e-5) -> jax.Array:
     """LayerNorm over the last axis; any leading shape."""
     c = x.shape[-1]
+    if not _pallas_enabled() or c > _MAX_NORM_C:
+        # Oracle path without flattening (see bias_sigmoid_mul): keeps
+        # mesh-sharded leading dims unmerged under GSPMD.
+        return ref.layer_norm_ref(x, gamma, beta, eps)
     xb = x.reshape((-1, c))
     return _ln_op(eps, xb, gamma, beta).reshape(x.shape)
 
@@ -418,9 +498,8 @@ def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
 
 
 def _bsm_impl(g, bg, v):
-    c = g.shape[-1]
-    if not KERNELS_ENABLED or c > _MAX_NORM_C:
-        return ref.bias_sigmoid_mul_ref(g, bg, v)
+    # The public bias_sigmoid_mul wrapper routes the oracle leg before
+    # flattening; only the kernel leg reaches here.
     return bias_sigmoid_mul_pallas(g, bg, v, interpret=_interpret())
 
 
@@ -450,6 +529,11 @@ _bsm_op.defvjp(_bsm_fwd, _bsm_bwd)
 def bias_sigmoid_mul(g: jax.Array, bg: jax.Array, v: jax.Array) -> jax.Array:
     """sigmoid(g + bg) * v; g and v share shape (..., C), bg is (C,)."""
     c = g.shape[-1]
+    if not _pallas_enabled() or c > _MAX_NORM_C:
+        # Oracle path without flattening: reshaping (B, G, ...) to rows would
+        # merge mesh-sharded dims under GSPMD and force a resharding copy of
+        # the whole tensor (same note as fused_softmax 5D / bias_dropout_add).
+        return ref.bias_sigmoid_mul_ref(g, bg, v)
     out = _bsm_op(g.reshape((-1, c)), bg, v.reshape((-1, c)))
     return out.reshape(v.shape)
 
@@ -461,7 +545,7 @@ def bias_sigmoid_mul(g: jax.Array, bg: jax.Array, v: jax.Array) -> jax.Array:
 
 def _bda_impl(rate, x, b, residual, keep):
     c = x.shape[-1]
-    if not KERNELS_ENABLED or c > _MAX_NORM_C:
+    if not _pallas_enabled() or c > _MAX_NORM_C:
         return ref.bias_dropout_add_ref(x, b, residual,
                                         keep if rate > 0.0 else None, rate)
     return bias_dropout_add_pallas(x, b, residual, keep, rate=rate,
@@ -529,7 +613,7 @@ def bias_dropout_add(
         eff_rate = rate
     if b is None:
         b = jnp.zeros((c,), x.dtype)
-    if not KERNELS_ENABLED or c > _MAX_NORM_C:
+    if not _pallas_enabled() or c > _MAX_NORM_C:
         # Oracle path without flattening: reshaping (B, G, ...) to rows would
         # merge mesh-sharded dims under GSPMD (same note as fused_softmax 5D).
         return ref.bias_dropout_add_ref(x, b, residual, keep_full, eff_rate)

@@ -81,6 +81,39 @@ def attention_ref(
     return out, lse
 
 
+def attention_bwd_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    bias: jax.Array | None,
+    mask: jax.Array | None,
+    g: jax.Array,
+    scale: float = 1.0,
+):
+    """Autodiff gradients of attention_ref's output under cotangent ``g`` —
+    the oracle for both legs of ops._attn_bwd (the jnp KV-scan and the fused
+    flash_attention_bwd_pallas kernel). Returns (dq, dk, dv, dbias | None,
+    dmask | None)."""
+    diff = [q, k, v]
+    if bias is not None:
+        diff.append(bias)
+    if mask is not None:
+        diff.append(mask)
+
+    def f(*args):
+        b_ = args[3] if bias is not None else None
+        m_ = args[3 + (bias is not None)] if mask is not None else None
+        return attention_ref(args[0], args[1], args[2], b_, m_, scale)[0]
+
+    _, vjp = jax.vjp(f, *diff)
+    grads = list(vjp(g))
+    if bias is None:
+        grads.insert(3, None)
+    if mask is None:
+        grads.append(None)
+    return tuple(grads)
+
+
 def layer_norm_ref(
     x: jax.Array,
     gamma: jax.Array,

@@ -1,10 +1,12 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The dry-run lowers the XLA-native op paths: Pallas kernels run in interpret
-# mode on CPU (a per-grid-cell loop — catastrophic inside a 512-device SPMD
-# program) and are exactly-drop-in on the real TPU target, where they replace
-# patterns XLA otherwise fuses natively.
-os.environ["REPRO_DISABLE_KERNELS"] = "1"
+# Kernels stay ENABLED: on a non-TPU backend every op lowers its XLA-native
+# leg (ops._pallas_enabled) — interpret-mode Pallas (a per-grid-cell loop,
+# catastrophic inside a 512-device SPMD program) never runs unless
+# REPRO_PALLAS_INTERPRET=1. In particular the Evoformer attention sites lower
+# the shard_map-wrapped fused-attention path (GspmdDist.sharded_attention),
+# i.e. the dry-run proves the production DAP x fused-kernel composition —
+# no oracle fallback, no merged-(B, G) all-gather.
 
 """Multi-pod dry-run (deliverable e).
 
@@ -291,6 +293,9 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    # jax 0.4.x returns a one-element list of cost dicts; >=0.5 a plain dict.
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     flops, hbm_bytes = analysis.hlo_cost(hlo)
     coll = analysis.parse_collectives(hlo, mesh.shape["model"])

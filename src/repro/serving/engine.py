@@ -76,8 +76,16 @@ class ServingEngine:
         )
 
     def submit(self, prompt: np.ndarray, **kw) -> Request:
-        req = Request(uid=self._next_uid, prompt=np.asarray(prompt, np.int32),
-                      **kw)
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.shape[-1] > self.max_seq:
+            # Admitting an over-length prompt would prefill past the cache
+            # extent and make every later decode step clamp its .at[].set
+            # into the last cache row — silent KV corruption for the whole
+            # batch. Reject at the API boundary instead.
+            raise ValueError(
+                f"prompt length {prompt.shape[-1]} exceeds the engine's "
+                f"max_seq={self.max_seq}")
+        req = Request(uid=self._next_uid, prompt=prompt, **kw)
         self._next_uid += 1
         self.pending.append(req)
         return req
@@ -102,20 +110,36 @@ class ServingEngine:
             # first generated token comes from the prefill logits
             self._emit(slot, out["logits"][0, -1], req)
 
+    def _release(self, slot: int, req: Request):
+        """Finish a request and free its slot (single source of the slot
+        teardown invariant)."""
+        req.done = True
+        self.finished.append(req)
+        self.slot_req[slot] = None
+        self.lengths = self.lengths.at[slot].set(0)
+
     def _emit(self, slot: int, logits, req: Request):
         self._rng, sub = jax.random.split(self._rng)
         tok = int(sample_token(logits, sub, req.temperature))
         req.generated.append(tok)
         if (req.eos_id is not None and tok == req.eos_id) or \
                 len(req.generated) >= req.max_new_tokens:
-            req.done = True
-            self.finished.append(req)
-            self.slot_req[slot] = None
-            self.lengths = self.lengths.at[slot].set(0)
+            self._release(slot, req)
+
+    def _retire_full(self):
+        """Force-finish any slot whose sequence reached max_seq: there is no
+        cache row left for another decode write — letting step() run would
+        clamp the .at[lengths].set into row max_seq-1 and corrupt the KV
+        cache for the remaining tokens."""
+        lengths = np.asarray(self.lengths)  # one host read per step, not per slot
+        for slot, req in enumerate(self.slot_req):
+            if req is not None and int(lengths[slot]) >= self.max_seq:
+                self._release(slot, req)
 
     def step(self):
         """One batched decode step across all active slots."""
         self._admit()
+        self._retire_full()
         active = [s for s, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return False

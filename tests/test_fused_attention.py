@@ -108,6 +108,79 @@ def test_fused_attention_kv_tile_invariance():
                                    atol=1e-6)
 
 
+def test_fused_attention_xla_leg_matches_pallas_interpret(monkeypatch):
+    """The XLA-native online-softmax forward (default off-TPU leg) and the
+    Pallas kernel (REPRO_PALLAS_INTERPRET=1 validation leg) are the same
+    computation."""
+    q, k, v, bias, mask = _mk(3, 21, 29, 2, 16, jnp.float32, True, True,
+                              bias_b=3, seed=5)
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    y_xla = ops.fused_attention(q, k, v, bias=bias, mask=mask, kv_tile=16)
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    y_pallas = ops.fused_attention(q, k, v, bias=bias, mask=mask, kv_tile=16)
+    np.testing.assert_allclose(np.asarray(y_xla), np.asarray(y_pallas),
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("with_bias,with_mask", [
+    (True, True), (True, False), (False, True), (False, False),
+])
+def test_fused_pallas_backward_matches_ref(monkeypatch, with_bias, with_mask):
+    """flash_attention_bwd_pallas (interpret mode) == autodiff of the
+    scores-materialized oracle, for every bias/mask combination — including
+    the bias-group (rep > 1) reduction sweep."""
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    n, sq, skv, h, d = 4, 19, 27, 2, 8
+    q, k, v, bias, mask = _mk(n, sq, skv, h, d, jnp.float32, with_bias,
+                              with_mask, bias_b=2, seed=7)
+    scale = 0.7
+    args = [q, k, v] + ([bias] if with_bias else []) \
+        + ([mask] if with_mask else [])
+
+    def loss(*a):
+        b_ = a[3] if with_bias else None
+        m_ = a[3 + with_bias] if with_mask else None
+        return jnp.sum(jnp.sin(ops.fused_attention(
+            a[0], a[1], a[2], bias=b_, mask=m_, scale=scale, kv_tile=16)))
+
+    got = jax.grad(loss, argnums=tuple(range(len(args))))(*args)
+    out, _ = ref.attention_ref(q, k, v, bias if with_bias else None,
+                               mask if with_mask else None, scale)
+    want = ref.attention_bwd_ref(q, k, v, bias if with_bias else None,
+                                 mask if with_mask else None,
+                                 jnp.cos(out), scale)
+    want = [w for w in want if w is not None]
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5,
+                                   rtol=1e-3)
+
+
+def test_fused_pallas_backward_matches_scan_bf16(monkeypatch):
+    """bf16: the Pallas backward and the jnp KV-scan backward agree on the
+    same residuals (the scan is the oracle leg of ops._attn_bwd)."""
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    q, k, v, bias, mask = _mk(2, 24, 24, 2, 16, jnp.bfloat16, True, True,
+                              bias_b=2, seed=9)
+
+    def loss(q_, k_, v_):
+        return jnp.sum(ops.fused_attention(
+            q_, k_, v_, bias=bias, mask=mask, kv_tile=16).astype(jnp.float32)
+            ** 2)
+
+    g_pallas = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    old = ops.FORCE_SCAN_ATTN_BWD
+    try:
+        ops.FORCE_SCAN_ATTN_BWD = True
+        g_scan = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    finally:
+        ops.FORCE_SCAN_ATTN_BWD = old
+    for a, b in zip(g_pallas, g_scan):
+        a = np.asarray(a, np.float32)
+        b = np.asarray(b, np.float32)
+        scale = max(1.0, float(np.abs(b).max()))
+        assert float(np.abs(a - b).max()) <= 2e-2 * scale
+
+
 def test_fused_attention_disabled_matches_kernel():
     """REPRO_DISABLE_KERNELS oracle fallback == Pallas path (A/B toggle)."""
     q, k, v, bias, mask = _mk(2, 16, 16, 2, 8, jnp.float32, True, True)

@@ -53,6 +53,41 @@ def test_engine_more_requests_than_slots(setup):
     assert all(len(r.generated) == 3 for r in finished)
 
 
+def test_engine_rejects_overlength_prompt(setup):
+    """A prompt longer than the KV-cache extent must be rejected at submit()
+    — admitting it would clamp decode-time cache writes into the last row."""
+    cfg, params = setup
+    eng = ServingEngine(params, cfg, n_slots=1, max_seq=16)
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.submit(np.zeros((17,), np.int32))
+    # boundary: a max_seq-length prompt is admissible (one token from the
+    # prefill logits, then the slot is force-finished).
+    req = eng.submit(np.random.default_rng(3).integers(0, cfg.vocab,
+                                                       size=(16,)),
+                     max_new_tokens=8)
+    finished = eng.run()
+    assert finished == [req] and req.done
+    assert len(req.generated) == 1
+
+
+def test_engine_forces_done_at_max_seq(setup):
+    """A slot that reaches max_seq is force-finished instead of decoding
+    past the cache: generation stops at the cap and the tokens produced up
+    to the cap match unbounded sequential greedy decoding (i.e. no clamped
+    cache writes corrupted earlier rows)."""
+    cfg, params = setup
+    max_seq, plen = 12, 8
+    eng = ServingEngine(params, cfg, n_slots=2, max_seq=max_seq)
+    prompt = np.random.default_rng(4).integers(0, cfg.vocab, size=(plen,))
+    req = eng.submit(prompt, max_new_tokens=50)
+    finished = eng.run()
+    assert finished == [req] and req.done
+    # prefill emits 1 token; decode writes rows plen..max_seq-1 emit the rest
+    assert len(req.generated) == max_seq - plen + 1
+    want = ref_greedy(params, cfg, prompt, len(req.generated))
+    assert req.generated == want
+
+
 def test_engine_eos_stops_early(setup):
     cfg, params = setup
     prompt = np.random.default_rng(2).integers(0, cfg.vocab, size=(6,))
