@@ -1,0 +1,151 @@
+"""Fused triangle-multiplication + outer-product-mean kernel A/B at
+pair-stack shapes (the post-attention Evoformer hot paths).
+
+Two executions of each chain:
+
+  fused         ops.fused_triangle_mult / ops.fused_outer_product_mean — the
+                tile-bounded sweep (Pallas on TPU; off-TPU the XLA legs: the
+                j-block scan for the triangle, the reassociated contraction
+                for the OPM — no (B, r, r, c, c) tensor exists at all) with
+                the recompute custom_vjp (inputs + per-tile stats + output).
+  materialized  ref.triangle_mult_ref / ref.outer_product_mean_ref — the
+                pre-kernel jnp path: the full (B, r, r, c) fp32 product /
+                (B, r, r, c, c) outer-product transient in HBM, autodiff
+                backward storing them as residuals.
+
+For each shape: forward and forward+backward wall time plus the modeled
+peak transient bytes (repro.memory.autochunk.triangle_transient_bytes /
+opm_transient_bytes) — the fused columns scale with the planner tile, the
+materialized columns with r²·c. Acceptance rows:
+``tri_opm_fused_vs_materialized_{fwd,fwdbwd}_r{r}`` are the combined
+pair-stack ratios. On the CPU XLA leg the forward ratio lands around the
+0.6x gate (the OPM reassociation is the big win; both paths are otherwise
+GEMM-flop-bound); the fwd+bwd ratio sits ~0.8x because the recompute
+custom_vjp pays one extra product pass — that pass is exactly what bounds
+the backward's transient at the tile instead of r²·c, which is the metric
+the TPU target cares about (HBM traffic), shown in the bytes columns.
+Interpret-mode Pallas runs only under REPRO_PALLAS_INTERPRET=1; the bytes
+columns are backend-independent.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, time_fn
+from repro.kernels import ops, ref
+from repro.memory.autochunk import opm_transient_bytes, triangle_transient_bytes
+
+TILE = 128
+
+
+def _tri_inputs(r, c, d, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 10)
+    shape = (1, r, r, c)
+    a_lin = jax.random.normal(ks[0], shape)
+    ga = jax.random.normal(ks[1], shape)
+    mask = jax.random.bernoulli(ks[2], 0.9, (1, r, r)).astype(jnp.float32)
+    b_full = jax.random.normal(ks[3], shape)
+    gamma = jax.random.normal(ks[4], (c,))
+    beta = jax.random.normal(ks[5], (c,))
+    w_out = jax.random.normal(ks[6], (c, d))
+    b_out = jax.random.normal(ks[7], (d,))
+    g_lin = jax.random.normal(ks[8], (1, r, r, d))
+    g_bias = jax.random.normal(ks[9], (d,))
+    return (a_lin, ga, mask, b_full, gamma, beta, w_out, b_out, g_lin, g_bias)
+
+
+def _opm_inputs(s, r, c, d, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    a = jax.random.normal(ks[0], (1, s, r, c))
+    b = jax.random.normal(ks[1], (1, s, r, c))
+    ma = jax.random.bernoulli(ks[2], 0.9, (1, s, r)).astype(jnp.float32)
+    mb = jax.random.bernoulli(ks[3], 0.9, (1, s, r)).astype(jnp.float32)
+    a = a * ma[..., None]
+    b = b * mb[..., None]
+    w = jax.random.normal(ks[4], (c * c, d))
+    bias = jax.random.normal(ks[5], (d,))
+    return (a, b, ma, mb, w, bias)
+
+
+def _paired(fns, args, iters=5, warmup=2):
+    """Interleaved A/B timing for drift-robust ratios on noisy hosts: each
+    iteration times every variant back-to-back; per-variant medians are
+    taken over iterations, so slow system phases hit all variants alike."""
+    import time as _time
+
+    samples = {name: [] for name in fns}
+    for name, fn in fns.items():
+        for _ in range(warmup):
+            out = fn(*args)
+        jax.block_until_ready(out)
+    for _ in range(iters):
+        for name, fn in fns.items():
+            t0 = _time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            samples[name].append((_time.perf_counter() - t0) * 1e6)
+    med = {name: sorted(ts)[len(ts) // 2] for name, ts in samples.items()}
+    return med
+
+
+def _ab(tag, fused_fn, mat_fn, args, diff_idx, peak_fused, peak_mat,
+        iters=5):
+    """Time fwd and fwd+bwd for both variants (interleaved); returns
+    {variant: (t_fwd, t_fwdbwd)}."""
+    peaks = {"fused": peak_fused, "materialized": peak_mat}
+
+    def grad_of(fn):
+        return jax.jit(jax.grad(
+            lambda *a: jnp.sum(fn(*a) ** 2), argnums=diff_idx))
+
+    t_f = _paired({"fused": jax.jit(fused_fn),
+                   "materialized": jax.jit(mat_fn)}, args, iters=iters)
+    t_b = _paired({"fused": grad_of(fused_fn),
+                   "materialized": grad_of(mat_fn)}, args, iters=iters)
+    times = {}
+    for name in ("fused", "materialized"):
+        csv_row(f"{tag}_{name}_fwd", t_f[name],
+                f"peak_pair_bytes={peaks[name]}")
+        csv_row(f"{tag}_{name}_fwdbwd", t_b[name],
+                f"peak_pair_bytes={peaks[name]}")
+        times[name] = (t_f[name], t_b[name])
+    return times
+
+
+def run():
+    backend = jax.default_backend()
+    d = 128
+    for r, c in [(128, 64), (256, 128)]:
+        # --- triangle multiplicative update ---
+        targs = _tri_inputs(r, c, d)
+        t_times = _ab(
+            f"tri_r{r}c{c}",
+            functools.partial(ops.fused_triangle_mult, tile=TILE),
+            ref.triangle_mult_ref,
+            targs, (0, 3, 8),
+            triangle_transient_bytes(r, r, c, tile=TILE, fused=True,
+                                     dtype_bytes=4),
+            triangle_transient_bytes(r, r, c, fused=False, dtype_bytes=4))
+
+        # --- outer-product-mean (AlphaFold c=32) ---
+        s, c_opm = 32, 32
+        oargs = _opm_inputs(s, r, c_opm, d)
+        o_times = _ab(
+            f"opm_r{r}",
+            functools.partial(ops.fused_outer_product_mean, tile=TILE),
+            ref.outer_product_mean_ref,
+            oargs, (0, 1),
+            opm_transient_bytes(r, r, s, c_opm, tile=TILE, fused=True,
+                                dtype_bytes=4),
+            opm_transient_bytes(r, r, s, c_opm, fused=False, dtype_bytes=4))
+
+        for phase, k in (("fwd", 0), ("fwdbwd", 1)):
+            ratio = ((t_times["fused"][k] + o_times["fused"][k])
+                     / (t_times["materialized"][k]
+                        + o_times["materialized"][k]))
+            csv_row(f"tri_opm_fused_vs_materialized_{phase}_r{r}", 0,
+                    f"ratio={ratio:.2f}x (backend={backend})")
+
+
+if __name__ == "__main__":
+    run()

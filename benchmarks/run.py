@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
 
   bench_softmax       Fig. 8    fused softmax kernel
   bench_attention     §III.B    fused flash attention vs scores-materialized
+  bench_triangle      §V        fused triangle-mult + OPM vs materialized
   bench_layernorm     Fig. 9    fused LayerNorm kernel
   bench_comm_volume   Table III DAP vs TP communication volume
   bench_mp_scaling    Fig. 10   model-parallel scaling (DAP vs TP), real devices
@@ -25,12 +26,13 @@ def main() -> None:
         bench_layernorm,
         bench_mp_scaling,
         bench_softmax,
+        bench_triangle,
     )
 
     print("name,us_per_call,derived")
-    for mod in (bench_softmax, bench_attention, bench_layernorm,
-                bench_comm_volume, bench_mp_scaling, bench_dp_scaling,
-                bench_inference, bench_duality):
+    for mod in (bench_softmax, bench_attention, bench_triangle,
+                bench_layernorm, bench_comm_volume, bench_mp_scaling,
+                bench_dp_scaling, bench_inference, bench_duality):
         try:
             mod.run()
         except Exception as e:  # keep the harness going; failures are visible

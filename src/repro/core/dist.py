@@ -34,6 +34,21 @@ additive fp32 (or None). Each backend must run ``ops.fused_attention`` on
   representation). ``sharded_attention_supported`` reports whether the
   global shape divides the mesh; callers fall back to the (unflattened)
   scores-materialized path otherwise.
+
+``sharded_triangle`` / ``sharded_opm`` contracts (pair-stack counterparts,
+PR 3): the fused triangular-multiplicative-update and outer-product-mean
+kernels (``ops.fused_triangle_mult`` / ``ops.fused_outer_product_mean``) on
+the DAP layouts — triangle: a_lin/ga ``(B, I, K, C)`` and g_lin
+``(B, I, J, D)`` with I (the pair-row dim) riding the DAP axis, b_full
+``(B, J, K, C)`` the gathered right operand replicated over it; OPM:
+a ``(B, S, I, C)`` with I riding the DAP axis, b_full ``(B, S, J, C)``
+replicated. Same rules as attention: LocalDist/ShardMapDist hand the ops
+already-local blocks; GspmdDist shard_maps the op over
+``(batch_axes, 'model')`` so the kernel's tiling and the backward's j-block
+scan run on local shards and no merged-sharded-dim reshape reaches GSPMD.
+``sharded_triangle_supported`` / ``sharded_opm_supported`` report whether
+the sharded extent divides the mesh; the Evoformer falls back to its
+materialized jnp path otherwise.
 """
 from __future__ import annotations
 
@@ -78,6 +93,21 @@ def _local_fused_attention(q, k, v, *, bias=None, mask=None, scale=None,
                                kv_tile=kv_tile)
 
 
+def _local_fused_triangle(a_lin, ga, mask, b_full, gamma, beta, w_out, b_out,
+                          g_lin, g_bias, *, tile=0):
+    from repro.kernels import ops
+
+    return ops.fused_triangle_mult(a_lin, ga, mask, b_full, gamma, beta,
+                                   w_out, b_out, g_lin, g_bias, tile=tile)
+
+
+def _local_fused_opm(a, b_full, mask_a, mask_b, w, bias, *, tile=0):
+    from repro.kernels import ops
+
+    return ops.fused_outer_product_mean(a, b_full, mask_a, mask_b, w, bias,
+                                        tile=tile)
+
+
 class LocalDist:
     """Identity backend (1 DAP device)."""
 
@@ -104,6 +134,20 @@ class LocalDist:
                           kv_tile=0):
         return _local_fused_attention(q, k, v, bias=bias, mask=mask,
                                       scale=scale, kv_tile=kv_tile)
+
+    def sharded_triangle_supported(self, i_extent: int) -> bool:
+        return True
+
+    def sharded_triangle(self, a_lin, ga, mask, b_full, gamma, beta, w_out,
+                         b_out, g_lin, g_bias, *, tile=0):
+        return _local_fused_triangle(a_lin, ga, mask, b_full, gamma, beta,
+                                     w_out, b_out, g_lin, g_bias, tile=tile)
+
+    def sharded_opm_supported(self, i_extent: int) -> bool:
+        return True
+
+    def sharded_opm(self, a, b_full, mask_a, mask_b, w, bias, *, tile=0):
+        return _local_fused_opm(a, b_full, mask_a, mask_b, w, bias, tile=tile)
 
 
 @dataclass(frozen=True)
@@ -147,6 +191,22 @@ class ShardMapDist:
         # fused kernel runs on the local block as-is.
         return _local_fused_attention(q, k, v, bias=bias, mask=mask,
                                       scale=scale, kv_tile=kv_tile)
+
+    def sharded_triangle_supported(self, i_extent: int) -> bool:
+        return True
+
+    def sharded_triangle(self, a_lin, ga, mask, b_full, gamma, beta, w_out,
+                         b_out, g_lin, g_bias, *, tile=0):
+        # Inside shard_map the I dim is already the local shard and b_full
+        # was all_gathered to the full (B, J, K, C) — run the op as-is.
+        return _local_fused_triangle(a_lin, ga, mask, b_full, gamma, beta,
+                                     w_out, b_out, g_lin, g_bias, tile=tile)
+
+    def sharded_opm_supported(self, i_extent: int) -> bool:
+        return True
+
+    def sharded_opm(self, a, b_full, mask_a, mask_b, w, bias, *, tile=0):
+        return _local_fused_opm(a, b_full, mask_a, mask_b, w, bias, tile=tile)
 
 
 @dataclass(frozen=True)
@@ -232,6 +292,59 @@ class GspmdDist:
 
         return shard_map_compat(local_fn, self.mesh, tuple(in_specs), io)(
             *args)
+
+    def sharded_triangle_supported(self, i_extent: int) -> bool:
+        """The shard_map wrapper needs the pair-row (I) dim to divide the
+        DAP axis (a non-dividing batch dim is handled by replicating it)."""
+        return i_extent % self.mesh.shape[self.axis] == 0
+
+    def sharded_triangle(self, a_lin, ga, mask, b_full, gamma, beta, w_out,
+                         b_out, g_lin, g_bias, *, tile=0):
+        """Run the fused triangle update under shard_map over
+        (batch_axes, model): each device gets its local (B_loc, I_loc, K, C)
+        left block and gate tile with the gathered b_full replicated — the
+        kernel's tiling and the backward's j-block recompute scan see local
+        shards only, so GSPMD never inserts a merged-(B, I) all-gather.
+        Differentiable (shard_map transposes the op's custom_vjp)."""
+        bx = batch_spec(self.mesh)
+        if not self._batch_shardable(a_lin.shape[0]):
+            bx = None
+        row4 = P(bx, self.axis, None, None)
+        rep = lambda x: P(*([None] * x.ndim))
+        in_specs = (row4, row4, P(bx, self.axis, None),
+                    P(bx, None, None, None), rep(gamma), rep(beta),
+                    rep(w_out), rep(b_out), row4, rep(g_bias))
+
+        def local_fn(al, g_, mk, bf, gam, bet, w_, bo, gl, gb):
+            return _local_fused_triangle(al, g_, mk, bf, gam, bet, w_, bo,
+                                         gl, gb, tile=tile)
+
+        return shard_map_compat(local_fn, self.mesh, in_specs, row4)(
+            a_lin, ga, mask, b_full, gamma, beta, w_out, b_out, g_lin,
+            g_bias)
+
+    def sharded_opm_supported(self, i_extent: int) -> bool:
+        return i_extent % self.mesh.shape[self.axis] == 0
+
+    def sharded_opm(self, a, b_full, mask_a, mask_b, w, bias, *, tile=0):
+        """Run the fused outer-product-mean under shard_map over
+        (batch_axes, model): the I dim of the left projection/mask rides the
+        DAP axis, the gathered right operand and its mask are replicated,
+        and the output lands I-sharded — matching the pair rep."""
+        bx = batch_spec(self.mesh)
+        if not self._batch_shardable(a.shape[0]):
+            bx = None
+        rep = lambda x: P(*([None] * x.ndim))
+        in_specs = (P(bx, None, self.axis, None), P(bx, None, None, None),
+                    P(bx, None, self.axis), P(bx, None, None),
+                    rep(w), rep(bias))
+        out_spec = P(bx, self.axis, None, None)
+
+        def local_fn(a_, bf, ma, mb, w_, bi):
+            return _local_fused_opm(a_, bf, ma, mb, w_, bi, tile=tile)
+
+        return shard_map_compat(local_fn, self.mesh, in_specs, out_spec)(
+            a, b_full, mask_a, mask_b, w, bias)
 
 
 def batch_spec(mesh) -> tuple:

@@ -18,17 +18,25 @@ Kernel usage (paper §IV.A + ScaleFold's fused-attention extension): all four
 attention sites (MSA row, MSA col, triangle start/end) go through the
 flash-style fused gated-attention Pallas kernel (``ops.fused_attention``) —
 online softmax over KV tiles, so the (B, G, H, R, R) scores tensor never
-reaches HBM; with ``REPRO_DISABLE_KERNELS=1`` (or out-of-envelope shapes)
-they fall back to the scores-materialized path with the fused
-scale+bias+mask+softmax kernel, kept for A/B and for the GSPMD production
-dry-run. All LayerNorms go through the fused LN kernel; gating through
-bias+sigmoid+mul; residual adds through bias+dropout+add with the AlphaFold
-shared-axis dropout mask. QKV and left/right projections use merged GEMMs.
+reaches HBM. The pair stack's remaining hot paths go through the fused
+triangle/OPM kernels (kernels/triangle.py): both triangular multiplicative
+updates route ``dist.sharded_triangle`` (k-tiled product with the input
+gating, pair mask, output LayerNorm and output gate fused into one sweep —
+the (B, i, j, c) fp32 product never hits HBM at full size) and the
+Outer-Product-Mean routes ``dist.sharded_opm`` (s-tiled outer product with
+the fp32 mask-normalization and c²→d projection fused — no (B, i, j, c, c)
+transient). With ``REPRO_DISABLE_KERNELS=1`` (or out-of-envelope shapes)
+every site falls back to its materialized jnp path, kept for A/B and
+diagnosis; ``REPRO_FORCE_TRIANGLE_ORACLE=1`` pins just the triangle/OPM ops
+to their oracles. All LayerNorms go through the fused LN kernel; gating
+through bias+sigmoid+mul; residual adds through bias+dropout+add with the
+AlphaFold shared-axis dropout mask. QKV and left/right projections use
+merged GEMMs.
 
-Chunk knobs (``inference_chunk``, ``opm_chunk``, ``attn_kv_tile``) default to
-0 = off/kernel-default; the AutoChunk planner (repro.memory.autochunk) fills
-them from the HBM budget at the alphafold_forward level instead of hand-set
-constants.
+Chunk knobs (``inference_chunk``, ``opm_chunk``, ``attn_kv_tile``,
+``tri_k_tile``, ``opm_s_tile``) default to 0 = off/kernel-default; the
+AutoChunk planner (repro.memory.autochunk) fills them from the HBM budget at
+the alphafold_forward level instead of hand-set constants.
 """
 from __future__ import annotations
 
@@ -81,6 +89,17 @@ class EvoformerConfig:
     # recompute block). 0 = kernel default (512). Bounds the per-tile
     # attention transient at (B, G, H, r, kv_tile) instead of r^2.
     attn_kv_tile: int = 0
+    # Tile of the fused triangle-multiplication kernel: the Pallas grid's k
+    # accumulation tile and the XLA leg's / backward recompute's j output
+    # block. 0 = leg default (Pallas 64, VMEM-budgeted; XLA/backward j block
+    # 128 — the HBM-visible transient the planner models). Bounds the fp32
+    # product transient at (B, i_loc, tile, c) instead of (B, i_loc, r, c).
+    tri_k_tile: int = 0
+    # Tile of the fused outer-product-mean kernel: Pallas s accumulation
+    # tile / XLA-leg j output block / backward recompute block. 0 = leg
+    # default (Pallas 64, XLA/backward 128). Bounds the fp32 outer-product
+    # transient at (B, i_loc, tile, c_opm^2).
+    opm_s_tile: int = 0
     # Let the AutoChunk planner (repro.memory.autochunk) fill any chunk knob
     # left at 0 from the HBM budget — resolved once per forward at the
     # alphafold_forward level (trace-time, static shapes). Hand-set nonzero
@@ -307,6 +326,18 @@ def outer_product_mean(p, msa, msa_mask, dist, cfg: EvoformerConfig):
     # gather's launch->use window (it is independent of the gather).
     b_full, a = duality.overlap_window(b_full, a)
 
+    # Fused path (default): dist.sharded_opm — s-tiled accumulation of the
+    # outer product with the fp32 mask-normalization and c²→Hz projection
+    # fused, so the (B, i/N, r, c, c) transient never hits HBM at full size.
+    # GspmdDist shard_maps the op over (batch_axes, 'model') with b_full
+    # replicated. The j-chunked jnp path below stays as the A/B baseline
+    # (REPRO_DISABLE_KERNELS / REPRO_FORCE_TRIANGLE_ORACLE).
+    if (ops.fused_opm_supported(c, p["out"]["w"].shape[1], a.dtype)
+            and dist.sharded_opm_supported(a.shape[2])):
+        return dist.sharded_opm(a, b_full, msa_mask, mask_full,
+                                p["out"]["w"], p["out"]["b"],
+                                tile=cfg.opm_s_tile)
+
     def opm_block(b_blk, mask_blk):
         o = jnp.einsum("bsic,bsjd->bijcd", a, b_blk)  # (B, r/N, jc, c, c)
         norm = jnp.einsum("bsi,bsj->bij", msa_mask, mask_blk)
@@ -330,54 +361,84 @@ def outer_product_mean(p, msa, msa_mask, dist, cfg: EvoformerConfig):
     return outs.transpose(1, 2, 0, 3, 4).reshape(bsz, a.shape[2], r_full, -1)
 
 
-def triangle_mult_core(p, z_in_proj_src, z_gate_src, pair_mask_loc, dist,
-                       cfg: EvoformerConfig, incoming_src=None):
-    """Shared core of the two Triangular Multiplicative Updates.
+def triangle_mult_core(p, z_src, pair_mask_loc, dist,
+                       cfg: EvoformerConfig):
+    """Shared core of the two Triangular Multiplicative Updates: the full
+    gated update (including the output gate) in ``z_src`` coords.
 
-    z_in_proj_src: tensor the a/b projections read (already LN'ed); for the
-    "outgoing" update this is LN(z) (i-shard); for "incoming" it is the
-    transposed LN(z) (also row-sharded, in transposed coords).
-    Returns the (i-shard) update *before* the output gate.
+    z_src: tensor the a/b projections AND the output gate read (already
+    LN'ed); for the "outgoing" update this is LN(z) (i-shard); for
+    "incoming" it is the transposed LN(z) (row-sharded, transposed coords —
+    the sigmoid output gate commutes elementwise with the transpose).
+
+    Fused path (default): ``dist.sharded_triangle`` — k-tiled accumulation
+    of the triangular product with the a-side input gating, pair mask,
+    output LayerNorm and bias_sigmoid_mul output gate fused into the same
+    sweep (ops.fused_triangle_mult); the b half is gated+masked *before*
+    the row gather (elementwise commutes with the gather, and gathering the
+    gated half keeps the collective at (B, r, k, c)). GspmdDist shard_maps
+    the op over (batch_axes, 'model') with b_full replicated, so the
+    kernel's tiling only ever sees local (B_loc, i_loc, ...) blocks. The
+    materialized jnp path below stays behind REPRO_DISABLE_KERNELS /
+    REPRO_FORCE_TRIANGLE_ORACLE (and out-of-envelope shapes) for A/B.
     """
     c = cfg.tri_mult_dim
-    ab = dense(p["proj"], z_in_proj_src)           # (B, p/N, k, 2c) merged
-    g = dense(p["gate"], z_in_proj_src)
+    ab = dense(p["proj"], z_src)                   # (B, p/N, k, 2c) merged
+    g = dense(p["gate"], z_src)
+    # Fused output gate operand: sigmoid(z @ Wg + bg) * upd, computed in the
+    # same coords as the update (the gate bias rides into the fused op).
+    g_lin = jnp.einsum("...d,de->...e", z_src,
+                       p["gate_out"]["w"].astype(z_src.dtype))
+    if (ops.fused_triangle_supported(c, p["out"]["w"].shape[1], ab.dtype)
+            and dist.sharded_triangle_supported(ab.shape[1])):
+        a_lin, b_lin = jnp.split(ab, 2, axis=-1)
+        ga, gb = jnp.split(g, 2, axis=-1)
+        bm = (b_lin.astype(jnp.float32)
+              * jax.nn.sigmoid(gb.astype(jnp.float32))).astype(ab.dtype)
+        bm = bm * pair_mask_loc[..., None].astype(ab.dtype)
+        b_full = dist.all_gather(bm, axis=1)       # (B, r, k, c) gather rows
+        b_full = dist.constrain(b_full, ("b", None, None, None))
+        # Duality-Async window: fence the a-side operand with the gather so
+        # the triangular gather cannot sink to the fused product below.
+        b_full, a_lin = duality.overlap_window(b_full, a_lin)
+        return dist.sharded_triangle(
+            a_lin, ga, pair_mask_loc, b_full,
+            p["ln_out"]["gamma"], p["ln_out"]["beta"],
+            p["out"]["w"], p["out"]["b"], g_lin, p["gate_out"]["b"],
+            tile=cfg.tri_k_tile)
+    # Materialized A/B path: gated projections and the (B, p/N, r, c)
+    # product as standalone tensors, then LN -> projection -> gate.
     ab = ab * jax.nn.sigmoid(g.astype(jnp.float32)).astype(ab.dtype)
     ab = ab * pair_mask_loc[..., None].astype(ab.dtype)
     a, bm = jnp.split(ab, 2, axis=-1)
     b_full = dist.all_gather(bm, axis=1)           # (B, r, k, c) gather rows
     b_full = dist.constrain(b_full, ("b", None, None, None))
-    # Duality-Async window: fence the a-side operand with the gather so the
-    # triangular gather is not free to sink to the einsum below.
     b_full, a = duality.overlap_window(b_full, a)
     o = jnp.einsum("bikc,bjkc->bijc", a, b_full)   # (B, p/N, r, c)
-    return dense(p["out"], layer_norm(p["ln_out"], o))
+    upd = dense(p["out"], layer_norm(p["ln_out"], o))
+    # Fused gating kernel: sigmoid(z @ Wg + bg) * upd in one HBM pass.
+    return ops.bias_sigmoid_mul(g_lin, p["gate_out"]["b"], upd)
 
 
 def triangle_mult_outgoing(p, pair, pair_mask_loc, dist, cfg):
     z_n = layer_norm(p["ln_in"], pair)
-    upd = triangle_mult_core(p, z_n, z_n, pair_mask_loc, dist, cfg)
-    # Fused gating kernel: sigmoid(z_n @ Wg + bg) * upd in one HBM pass.
-    g_lin = jnp.einsum("...d,de->...e", z_n,
-                       p["gate_out"]["w"].astype(z_n.dtype))
-    return ops.bias_sigmoid_mul(g_lin, p["gate_out"]["b"], upd)
+    return triangle_mult_core(p, z_n, pair_mask_loc, dist, cfg)
 
 
 def triangle_mult_incoming(p, pair, pair_t, pair_mask_loc_t, dist, cfg):
     """incoming(z)_ij = sum_k a_ki b_kj == outgoing_core(z^T)_ij.
 
-    pair:   (B, i/N, j, Hz) — residual/gate source (i-shard).
+    pair:   (B, i/N, j, Hz) — kept for signature compatibility (TP mode);
+            the gate now reads the transposed coords directly.
     pair_t: (B, j/N, i, Hz) — transposed tensor (from all_to_all axis swap).
+
+    The whole gated update is computed in transposed coords (gate(z^T) =
+    gate(z)^T elementwise) and axis-swapped back to i-shard coords.
     """
-    z_n = layer_norm(p["ln_in"], pair)
+    del pair
     z_n_t = layer_norm(p["ln_in"], pair_t)
-    upd_t = triangle_mult_core(p, z_n_t, z_n_t, pair_mask_loc_t, dist, cfg)
-    # upd_t is o_out(z^T) sharded on z^T-rows; o_out(z^T)_pq = o_in(z)_pq and
-    # z^T-row shard p == z-col shard p... transpose back to i-shard coords.
-    upd = transpose_pair(upd_t, dist)
-    g_lin = jnp.einsum("...d,de->...e", z_n,
-                       p["gate_out"]["w"].astype(z_n.dtype))
-    return ops.bias_sigmoid_mul(g_lin, p["gate_out"]["b"], upd)
+    upd_t = triangle_mult_core(p, z_n_t, pair_mask_loc_t, dist, cfg)
+    return transpose_pair(upd_t, dist)
 
 
 def triangle_attention(p, pair, seq_mask, dist, cfg: EvoformerConfig):

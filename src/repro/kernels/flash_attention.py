@@ -14,7 +14,11 @@ are rebuilt per (q_tile, kv_tile) cell in VMEM, so the fp32
 ``(N, H, Sq, kv_block)`` recompute transient the jnp KV-scan backward streams
 through HBM never materializes. Three sweeps (dq; dk/dv + the mask
 reduction; the bias reduction), each a separate grid ordered so its
-accumulator lives in VMEM scratch across the innermost dimension.
+accumulator lives in VMEM scratch across the innermost dimension — except
+when the bias group is mesh-local (rep == 1, the shard-mapped DAP layout):
+then the dq sweep's recomputed ds tiles ARE dbias, so they are emitted as a
+second output of sweep 1 and the bias-reduction sweep is skipped (two sweeps
+total, one fewer full recompute pass over the tiles).
 
 An XLA-native forward with identical semantics (``flash_attention_xla``,
 lax.scan over KV tiles) serves as the non-TPU leg: interpret-mode Pallas is a
@@ -322,7 +326,8 @@ def _recompute_ds(q, k, v, do, lse, delta, b_blk, m_blk, *, scale, kv_len,
     return p, ds
 
 
-def _bwd_dq_kernel(*refs, scale, kv_len, kv_tile, has_bias, has_mask):
+def _bwd_dq_kernel(*refs, scale, kv_len, kv_tile, has_bias, has_mask,
+                   emit_dbias=False):
     idx = 0
     q_ref = refs[idx]; idx += 1
     k_ref = refs[idx]; idx += 1
@@ -334,7 +339,10 @@ def _bwd_dq_kernel(*refs, scale, kv_len, kv_tile, has_bias, has_mask):
     idx += int(has_bias)
     mk_ref = refs[idx] if has_mask else None
     idx += int(has_mask)
-    dq_ref, dq_acc = refs[idx], refs[idx + 1]
+    dq_ref = refs[idx]; idx += 1
+    db_ref = refs[idx] if emit_dbias else None
+    idx += int(emit_dbias)
+    dq_acc = refs[idx]
 
     jk = pl.program_id(3)
     n_kv = pl.num_programs(3)
@@ -353,6 +361,11 @@ def _bwd_dq_kernel(*refs, scale, kv_len, kv_tile, has_bias, has_mask):
         ds, k_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     ) * scale
+    if db_ref is not None:
+        # Mesh-local bias group (rep == 1): dbias IS the ds tile — each
+        # (iq, jk) grid cell owns its output block, so the separate
+        # bias-reduction sweep collapses into this one.
+        db_ref[0, 0] = ds
 
     @pl.when(jk == n_kv - 1)
     def _epilogue():
@@ -483,7 +496,9 @@ def flash_attention_bwd_pallas(
     per-head mask reduction (sum over q of ds) — callers sum over H. Three
     grid sweeps recompute the ds tile in VMEM (dq: KV-innermost; dk/dv + mask
     reduction: q-innermost; bias reduction: bias-group-innermost so the
-    (q_tile, kv_tile) accumulator can live in scratch).
+    (q_tile, kv_tile) accumulator can live in scratch) — or TWO sweeps when
+    the bias group is mesh-local (rep == 1): dbias is emitted directly from
+    the dq sweep's ds tiles and the bias-reduction sweep is skipped.
     """
     n, h, sq, d = q.shape
     skv = k.shape[2]
@@ -515,10 +530,16 @@ def flash_attention_bwd_pallas(
     if has_bias:
         assert bias is not None and bias.ndim == 4 and n % bias.shape[0] == 0
         rep = n // bias.shape[0]
+    # Mesh-local bias group (rep == 1, e.g. the shard-mapped DAP layout with
+    # one bias row per attention row): the dq sweep's ds tiles ARE dbias —
+    # emit them as a second output and skip the bias-reduction sweep
+    # entirely (3 recompute sweeps -> 2).
+    fuse_dbias = has_bias and rep == 1
 
     base_ops = [q, k, v, do, lse, delta]
 
-    # --- sweep 1: dq, grid (N, H, nq, nkv), KV innermost ---
+    # --- sweep 1: dq (+ dbias when the bias group is mesh-local),
+    #     grid (N, H, nq, nkv), KV innermost ---
     in_specs = qkv_specs(lambda g: g[2], lambda g: g[3])
     operands = list(base_ops)
     if has_bias:
@@ -531,18 +552,26 @@ def flash_attention_bwd_pallas(
         in_specs.append(pl.BlockSpec((1, kv_tile),
                                      lambda i, j, iq, jk: (i, jk)))
         operands.append(mask)
-    dq = pl.pallas_call(
+    out_specs = [pl.BlockSpec((1, 1, q_tile, d),
+                              lambda i, j, iq, jk: (i, j, iq, 0))]
+    out_shape = [jax.ShapeDtypeStruct((n, h, sq, d), jnp.float32)]
+    if fuse_dbias:
+        out_specs.append(pl.BlockSpec((1, 1, q_tile, kv_tile),
+                                      lambda i, j, iq, jk: (i, j, iq, jk)))
+        out_shape.append(jax.ShapeDtypeStruct((n, h, sq, skv), jnp.float32))
+    outs1 = pl.pallas_call(
         functools.partial(_bwd_dq_kernel, scale=scale, kv_len=kv_len,
                           kv_tile=kv_tile, has_bias=has_bias,
-                          has_mask=has_mask),
+                          has_mask=has_mask, emit_dbias=fuse_dbias),
         grid=(n, h, nq, nkv),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, 1, q_tile, d),
-                               lambda i, j, iq, jk: (i, j, iq, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, h, sq, d), jnp.float32),
+        out_specs=out_specs if fuse_dbias else out_specs[0],
+        out_shape=out_shape if fuse_dbias else out_shape[0],
         scratch_shapes=[pltpu.VMEM((q_tile, d), jnp.float32)],
         interpret=interpret,
     )(*operands)
+    dq = outs1[0] if fuse_dbias else outs1
+    dbias_fused = outs1[1] if fuse_dbias else None
 
     # --- sweep 2: dk/dv (+ mask reduction), grid (N, H, nkv, nq), q inner ---
     in_specs = qkv_specs(lambda g: g[3], lambda g: g[2])
@@ -582,9 +611,12 @@ def flash_attention_bwd_pallas(
     dk, dv = outs[0], outs[1]
     dmask_h = outs[2] if has_mask else None
 
-    # --- sweep 3: dbias, grid (B, H, nq, nkv, rep), bias group innermost ---
+    # --- sweep 3: dbias, grid (B, H, nq, nkv, rep), bias group innermost.
+    #     Skipped when the dq sweep already emitted dbias (rep == 1). ---
     dbias = None
-    if has_bias:
+    if fuse_dbias:
+        dbias = dbias_fused
+    elif has_bias:
         nb = bias.shape[0]
         in_specs = [
             pl.BlockSpec((1, 1, q_tile, d),

@@ -9,6 +9,11 @@ Figure-8/9-style microbenchmarks exercise.
 Dropout randomness: the kernel consumes pre-generated uint32 random bits
 (threshold compare in-register) rather than an in-kernel PRNG, keeping the
 kernel deterministic and identical between interpret (CPU) and TPU modes.
+
+``bias_sigmoid_mul_pallas`` is rank-polymorphic (2D–4D): a grid axis per
+leading dim instead of a row-flatten, so mesh-sharded (B, G, ...) leading
+dims stay unmerged under GSPMD (a reshape merging two sharded dims would
+force an all-gather of the whole representation).
 """
 from __future__ import annotations
 
@@ -17,6 +22,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.layer_norm import row_grid_specs
 
 ROW_TILE = 8
 LANE = 128
@@ -28,27 +35,28 @@ def _pad_to(n: int, m: int) -> int:
 
 def _bias_sigmoid_mul_kernel(g_ref, bg_ref, v_ref, o_ref):
     g = g_ref[...].astype(jnp.float32) + bg_ref[...].astype(jnp.float32)[0]
-    o_ref[...] = (jax.nn.sigmoid(g) * v_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+    o = jax.nn.sigmoid(g) * v_ref[...].astype(jnp.float32)
+    o_ref[...] = o.reshape(o_ref.shape).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def bias_sigmoid_mul_pallas(
     g: jax.Array, bg: jax.Array, v: jax.Array, *, interpret: bool = False
 ) -> jax.Array:
-    """g, v: (R, C); bg: (C,). Returns sigmoid(g + bg) * v in v.dtype."""
-    r, c = g.shape
+    """g, v: (..., R, C) (2D-4D); bg: (C,). sigmoid(g + bg) * v in v.dtype."""
+    r, c = g.shape[-2], g.shape[-1]
     c_pad = _pad_to(c, LANE)
     row_tile = ROW_TILE if r >= ROW_TILE else r
-    grid = (pl.cdiv(r, row_tile),)
+    grid, block, ix = row_grid_specs(g.shape, row_tile, c_pad)
     return pl.pallas_call(
         _bias_sigmoid_mul_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((row_tile, c_pad), lambda i: (i, 0)),
-            pl.BlockSpec((1, c_pad), lambda i: (0, 0)),
-            pl.BlockSpec((row_tile, c_pad), lambda i: (i, 0)),
+            pl.BlockSpec(block, ix),
+            pl.BlockSpec((1, c_pad), lambda *gi: (0, 0)),
+            pl.BlockSpec(block, ix),
         ],
-        out_specs=pl.BlockSpec((row_tile, c_pad), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec(block, ix),
         out_shape=jax.ShapeDtypeStruct(v.shape, v.dtype),
         interpret=interpret,
     )(g, bg.reshape(1, c), v)

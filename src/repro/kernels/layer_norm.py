@@ -10,6 +10,12 @@ to within bf16 resolution — asserted by the kernel test sweep.
 
 Fusion (the actual win, as in the paper): load x once from HBM, write y once,
 with statistics + affine applied in-register.
+
+Rank-polymorphic: 2D–4D inputs run under a grid over the leading dims — the
+kernel never row-flattens its input, so mesh-sharded (B, G, ...) leading dims
+stay unmerged under GSPMD (a reshape merging two sharded dims would force an
+all-gather of the whole representation; same contract as the shard-mapped
+fused attention).
 """
 from __future__ import annotations
 
@@ -27,8 +33,24 @@ def _pad_to(n: int, m: int) -> int:
     return ((n + m - 1) // m) * m
 
 
+def row_grid_specs(shape, row_tile: int, c_pad: int):
+    """Grid + x-block spec for an (..., R, C) tensor WITHOUT flattening the
+    leading dims: one grid axis per leading dim, blocks of (1, ..., row_tile,
+    c_pad). Returns (grid, block_shape, index_map)."""
+    lead = tuple(shape[:-2])
+    nl = len(lead)
+    grid = lead + (pl.cdiv(shape[-2], row_tile),)
+    block = (1,) * nl + (row_tile, c_pad)
+
+    def ix(*g):
+        return g[:nl] + (g[nl], 0)
+
+    return grid, block, ix
+
+
 def _layer_norm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float, c_actual: int):
-    x = x_ref[...].astype(jnp.float32)  # (ROW_TILE, C_pad)
+    x = x_ref[...].astype(jnp.float32)
+    x = x.reshape(x.shape[-2:])         # drop leading (1,)*nl block dims
     if c_actual != x.shape[-1]:
         lane = jax.lax.broadcasted_iota(jnp.int32, x.shape, x.ndim - 1)
         valid = lane < c_actual
@@ -41,7 +63,7 @@ def _layer_norm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float, c_actual: int)
     inv = jax.lax.rsqrt(var + eps)
     y = (x - mean) * inv
     y = y * g_ref[...].astype(jnp.float32)[0] + b_ref[...].astype(jnp.float32)[0]
-    o_ref[...] = y.astype(o_ref.dtype)
+    o_ref[...] = y.reshape(o_ref.shape).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "interpret"))
@@ -53,21 +75,21 @@ def layer_norm_pallas(
     eps: float = 1e-5,
     interpret: bool = False,
 ) -> jax.Array:
-    """x: (R, C) normalized over C; gamma/beta: (C,)."""
-    r, c = x.shape
+    """x: (..., R, C) (2D–4D) normalized over C; gamma/beta: (C,)."""
+    r, c = x.shape[-2], x.shape[-1]
     c_pad = _pad_to(c, LANE)
     row_tile = ROW_TILE if r >= ROW_TILE else r
-    grid = (pl.cdiv(r, row_tile),)
+    grid, block, ix = row_grid_specs(x.shape, row_tile, c_pad)
     kernel = functools.partial(_layer_norm_kernel, eps=eps, c_actual=c)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((row_tile, c_pad), lambda i: (i, 0)),
-            pl.BlockSpec((1, c_pad), lambda i: (0, 0)),
-            pl.BlockSpec((1, c_pad), lambda i: (0, 0)),
+            pl.BlockSpec(block, ix),
+            pl.BlockSpec((1, c_pad), lambda *g: (0, 0)),
+            pl.BlockSpec((1, c_pad), lambda *g: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((row_tile, c_pad), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec(block, ix),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         interpret=interpret,
     )(x, gamma.reshape(1, c), beta.reshape(1, c))

@@ -439,6 +439,205 @@ def fused_attention(
 
 
 # ---------------------------------------------------------------------------
+# fused triangle multiplicative update + outer-product-mean (pair stack)
+# ---------------------------------------------------------------------------
+
+# Envelope: the tile-epilogue GEMMs keep (i_t*j_t, C) and (i_t*j_t, C*C)
+# operands in VMEM — bound C (triangle channel) and C_opm². The OPM bound is
+# set by the (i_t·C, j_t·C) fp32 accumulator + (C², D) weight block fitting
+# ~16 MB VMEM (c=64 → 4 MB + 2 MB at i_t=j_t=16; c=128 would need 24 MB).
+_MAX_TRI_C = 1024
+_MAX_OPM_C = 64
+# Default j output block of the XLA legs and the backward recompute scans
+# (the HBM-visible transient the AutoChunk planner models). The Pallas
+# kernels' internal accumulation tile default is smaller (VMEM-budgeted):
+# kernels/triangle.py DEFAULT_PALLAS_TILE.
+_DEFAULT_TRI_TILE = 128
+_DEFAULT_OPM_TILE = 128
+
+
+def _triangle_oracle_forced() -> bool:
+    """CI leg: REPRO_FORCE_TRIANGLE_ORACLE=1 pins the triangle/OPM ops to
+    the materialized jnp oracles (ref.py) while the rest of the kernel set
+    stays on its default legs."""
+    return os.environ.get("REPRO_FORCE_TRIANGLE_ORACLE", "0") == "1"
+
+
+def _tri_dtype_ok(dtype) -> bool:
+    return jnp.dtype(dtype) in (jnp.dtype(jnp.float32),
+                                jnp.dtype(jnp.bfloat16))
+
+
+def fused_triangle_supported(c: int, d: int, dtype=None) -> bool:
+    """True when ops.fused_triangle_mult takes a fused leg (Pallas on TPU /
+    interpret, the XLA j-block scan elsewhere) for this channel size/dtype.
+    Callers keeping the materialized A/B path (the Evoformer's
+    REPRO_DISABLE_KERNELS toggle) branch on this."""
+    if not KERNELS_ENABLED or _triangle_oracle_forced():
+        return False
+    if dtype is not None and not _tri_dtype_ok(dtype):
+        return False
+    return c <= _MAX_TRI_C and d <= _MAX_TRI_C
+
+
+def fused_opm_supported(c: int, d: int, dtype=None) -> bool:
+    """Same contract as fused_triangle_supported, for the outer-product-mean
+    (c is the OPM channel — the kernel tile holds c² lanes)."""
+    if not KERNELS_ENABLED or _triangle_oracle_forced():
+        return False
+    if dtype is not None and not _tri_dtype_ok(dtype):
+        return False
+    return c <= _MAX_OPM_C and d <= _MAX_TRI_C
+
+
+def _tri_fwd_impl(eps, tile, a_lin, ga, mask, b_full, gamma, beta, w_out,
+                  b_out, g_lin, g_bias):
+    from repro.kernels import triangle as tri
+
+    if _pallas_enabled():
+        return tri.fused_triangle_pallas(
+            a_lin, ga, mask, b_full, gamma, beta, w_out, b_out, g_lin,
+            g_bias, eps=eps, k_tile=tile, interpret=_interpret())
+    a = tri.triangle_gate_a(a_lin, ga, mask)
+    return tri.fused_triangle_xla(
+        a, b_full, g_lin, gamma, beta, w_out, b_out, g_bias, eps=eps,
+        j_block=tile or _DEFAULT_TRI_TILE)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _tri_op(eps, tile, a_lin, ga, mask, b_full, gamma, beta, w_out, b_out,
+            g_lin, g_bias):
+    out, _, _ = _tri_fwd_impl(eps, tile, a_lin, ga, mask, b_full, gamma,
+                              beta, w_out, b_out, g_lin, g_bias)
+    return out
+
+
+def _tri_fwd(eps, tile, a_lin, ga, mask, b_full, gamma, beta, w_out, b_out,
+             g_lin, g_bias):
+    out, mean, inv = _tri_fwd_impl(eps, tile, a_lin, ga, mask, b_full,
+                                   gamma, beta, w_out, b_out, g_lin, g_bias)
+    # Recompute residuals: inputs + per-tile LN stats + the (already
+    # HBM-resident) output — never the (B, I, J, C) product. `out` gives the
+    # output-gate cotangent directly (g·out·(1-s), see triangle_mult_bwd).
+    return out, (a_lin, ga, mask, b_full, gamma, beta, w_out, b_out, g_lin,
+                 g_bias, mean, inv, out)
+
+
+def _tri_bwd(eps, tile, res, g):
+    from repro.kernels.triangle import triangle_mult_bwd
+
+    return triangle_mult_bwd(eps, tile or _DEFAULT_TRI_TILE, res, g)
+
+
+_tri_op.defvjp(_tri_fwd, _tri_bwd)
+
+
+def fused_triangle_mult(
+    a_lin: jax.Array,
+    ga: jax.Array,
+    mask: jax.Array,
+    b_full: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    w_out: jax.Array,
+    b_out: jax.Array,
+    g_lin: jax.Array,
+    g_bias: jax.Array,
+    *,
+    eps: float = 1e-5,
+    tile: int = 0,
+) -> jax.Array:
+    """Fused triangular multiplicative update:
+    ``sigmoid(g_lin + g_bias) * (LN_c(sum_k (a_lin·σ(ga)·mask) ⊙ b_full) @
+    w_out + b_out)`` in one sweep — the k-tiled product, input gating, pair
+    mask, output LayerNorm and the bias_sigmoid_mul output gate never
+    materialize intermediates at full (B, I, J, C) size.
+
+    Shapes: a_lin/ga (B, I, K, C); mask (B, I, K); b_full (B, J, K, C)
+    (gated+masked right operand — gathered under DAP; callers whose I dim is
+    mesh-sharded go through ``dist.sharded_triangle`` so the kernel sees
+    local blocks); gamma/beta (C,); w_out (C, D); b_out/g_bias (D,);
+    g_lin (B, I, J, D). ``tile`` is the Pallas k tile / XLA j block /
+    backward recompute block (0 = leg default: Pallas 64, XLA/backward
+    128) — AutoChunk plans it as ``tri_k_tile``.
+
+    custom_vjp: forward saves inputs + per-tile (mean, inv) LN stats; the
+    backward rebuilds the product per j block (kernels/triangle.py).
+    Out-of-envelope dtypes/channels, REPRO_DISABLE_KERNELS=1, and
+    REPRO_FORCE_TRIANGLE_ORACLE=1 fall back to ref.triangle_mult_ref.
+    """
+    if not fused_triangle_supported(a_lin.shape[-1], w_out.shape[-1],
+                                    a_lin.dtype):
+        return ref.triangle_mult_ref(a_lin, ga, mask, b_full, gamma, beta,
+                                     w_out, b_out, g_lin, g_bias, eps)
+    return _tri_op(eps, tile, a_lin, ga, mask, b_full, gamma, beta, w_out,
+                   b_out, g_lin, g_bias)
+
+
+def _opm_fwd_impl(tile, a, b_full, mask_a, mask_b, w, bias):
+    from repro.kernels import triangle as tri
+
+    if _pallas_enabled():
+        return tri.fused_opm_pallas(a, b_full, mask_a, mask_b, w, bias,
+                                    s_tile=tile, interpret=_interpret())
+    return tri.fused_opm_xla(a, b_full, mask_a, mask_b, w, bias,
+                             j_block=tile or _DEFAULT_OPM_TILE)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _opm_op(tile, a, b_full, mask_a, mask_b, w, bias):
+    return _opm_fwd_impl(tile, a, b_full, mask_a, mask_b, w, bias)
+
+
+def _opm_fwd(tile, a, b_full, mask_a, mask_b, w, bias):
+    out = _opm_fwd_impl(tile, a, b_full, mask_a, mask_b, w, bias)
+    # Residuals: inputs + the (already HBM-resident) output — `out` turns
+    # the mask-norm cotangent into a cheap (B, I, J, D) contraction instead
+    # of a full ov·(g@wᵀ) reduction over c² (see opm_bwd).
+    return out, (a, b_full, mask_a, mask_b, w, bias, out)
+
+
+def _opm_bwd(tile, res, g):
+    from repro.kernels.triangle import opm_bwd
+
+    return opm_bwd(tile or _DEFAULT_OPM_TILE, res, g)
+
+
+_opm_op.defvjp(_opm_fwd, _opm_bwd)
+
+
+def fused_outer_product_mean(
+    a: jax.Array,
+    b_full: jax.Array,
+    mask_a: jax.Array,
+    mask_b: jax.Array,
+    w: jax.Array,
+    bias: jax.Array,
+    *,
+    tile: int = 0,
+) -> jax.Array:
+    """Fused outer-product-mean: s-tiled accumulation of
+    ``sum_s a_si ⊗ b_sj`` with the fp32 mask-normalization and the c²→d
+    projection fused, so the (B, I, J, C, C) transient never reaches HBM at
+    full size.
+
+    Shapes: a (B, S, I, C), b_full (B, S, J, C) masked projections (b
+    gathered under DAP — mesh-sharded I goes through ``dist.sharded_opm``);
+    mask_a (B, S, I), mask_b (B, S, J); w (C*C, D), bias (D,). ``tile`` is
+    the Pallas s tile / XLA j block / backward recompute block (0 = leg
+    default: Pallas 64, XLA/backward 128) — AutoChunk plans it as
+    ``opm_s_tile``.
+
+    custom_vjp: forward saves only the inputs (the mask-norm is recomputed);
+    the backward rebuilds the normalized outer product per j block.
+    Fallbacks mirror fused_triangle_mult (ref.outer_product_mean_ref).
+    """
+    if not fused_opm_supported(a.shape[-1], w.shape[-1], a.dtype):
+        return ref.outer_product_mean_ref(a, b_full, mask_a, mask_b, w, bias)
+    return _opm_op(tile, a, b_full, mask_a, mask_b, w, bias)
+
+
+# ---------------------------------------------------------------------------
 # layer norm
 # ---------------------------------------------------------------------------
 
@@ -466,8 +665,9 @@ def _ln_bwd(eps, res, g):
     var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
     inv = jax.lax.rsqrt(var + eps)
     xhat = (xf - mean) * inv
-    dgamma = jnp.sum(gf * xhat, axis=0)
-    dbeta = jnp.sum(gf, axis=0)
+    lead = tuple(range(x.ndim - 1))
+    dgamma = jnp.sum(gf * xhat, axis=lead)
+    dbeta = jnp.sum(gf, axis=lead)
     gg = gf * gamma.astype(jnp.float32)
     dx = inv * (
         gg
@@ -482,12 +682,19 @@ _ln_op.defvjp(_ln_fwd, _ln_bwd)
 
 def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
                eps: float = 1e-5) -> jax.Array:
-    """LayerNorm over the last axis; any leading shape."""
+    """LayerNorm over the last axis; any leading shape.
+
+    The Pallas leg is rank-polymorphic for 2D-4D inputs (grid over the
+    leading dims, no row-flatten) so mesh-sharded (B, G, ...) leading dims
+    stay unmerged under GSPMD — same contract as the oracle leg. Only 1D /
+    5D+ shapes (outside the Evoformer layouts) reshape."""
     c = x.shape[-1]
     if not _pallas_enabled() or c > _MAX_NORM_C:
         # Oracle path without flattening (see bias_sigmoid_mul): keeps
         # mesh-sharded leading dims unmerged under GSPMD.
         return ref.layer_norm_ref(x, gamma, beta, eps)
+    if 2 <= x.ndim <= 4:
+        return _ln_op(eps, x, gamma, beta)
     xb = x.reshape((-1, c))
     return _ln_op(eps, xb, gamma, beta).reshape(x.shape)
 
@@ -519,7 +726,7 @@ def _bsm_bwd(res, grad):
     dv = (gradf * s).astype(v.dtype)
     dg_f = gradf * v.astype(jnp.float32) * s * (1.0 - s)
     dg = dg_f.astype(g.dtype)
-    dbg = dg_f.sum(axis=0).astype(bg.dtype)
+    dbg = dg_f.sum(axis=tuple(range(g.ndim - 1))).astype(bg.dtype)
     return dg, dbg, dv
 
 
@@ -527,13 +734,19 @@ _bsm_op.defvjp(_bsm_fwd, _bsm_bwd)
 
 
 def bias_sigmoid_mul(g: jax.Array, bg: jax.Array, v: jax.Array) -> jax.Array:
-    """sigmoid(g + bg) * v; g and v share shape (..., C), bg is (C,)."""
+    """sigmoid(g + bg) * v; g and v share shape (..., C), bg is (C,).
+
+    Rank-polymorphic Pallas leg for 2D-4D inputs (grid over the leading
+    dims): no row-flatten, so mesh-sharded leading dims stay unmerged under
+    GSPMD — matching the oracle leg."""
     c = g.shape[-1]
     if not _pallas_enabled() or c > _MAX_NORM_C:
         # Oracle path without flattening: reshaping (B, G, ...) to rows would
         # merge mesh-sharded dims under GSPMD and force a resharding copy of
         # the whole tensor (same note as fused_softmax 5D / bias_dropout_add).
         return ref.bias_sigmoid_mul_ref(g, bg, v)
+    if 2 <= g.ndim <= 4:
+        return _bsm_op(g, bg, v)
     out = _bsm_op(g.reshape((-1, c)), bg, v.reshape((-1, c)))
     return out.reshape(v.shape)
 

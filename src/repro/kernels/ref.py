@@ -114,6 +114,73 @@ def attention_bwd_ref(
     return tuple(grads)
 
 
+def triangle_mult_ref(
+    a_lin: jax.Array,
+    ga: jax.Array,
+    mask: jax.Array,
+    b_full: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    w_out: jax.Array,
+    b_out: jax.Array,
+    g_lin: jax.Array,
+    g_bias: jax.Array,
+    eps: float = 1e-5,
+) -> jax.Array:
+    """Materialized oracle for ops.fused_triangle_mult (the full fused
+    triangular multiplicative update chain).
+
+    a_lin, ga: (B, I, K, C) left projection / gate logits; mask: (B, I, K);
+    b_full: (B, J, K, C) gated+masked right operand (gathered under DAP);
+    gamma/beta: (C,) output LN; w_out: (C, D), b_out: (D,) output projection;
+    g_lin: (B, I, J, D) output-gate logits (pre-bias), g_bias: (D,).
+
+    out = sigmoid(g_lin + g_bias) * (LN_c(sum_k a·b) @ w_out + b_out) with
+    a = (a_lin * sigmoid(ga)) * mask — fp32 accumulation/statistics, GEMM
+    operands in the compute dtype. Materializes the full (B, I, J, C) fp32
+    product; the fused legs keep it tile-bounded.
+    """
+    f32 = jnp.float32
+    a = (a_lin.astype(f32) * jax.nn.sigmoid(ga.astype(f32))
+         ).astype(a_lin.dtype) * mask.astype(a_lin.dtype)[..., None]
+    o = jnp.einsum("bikc,bjkc->bijc", a, b_full, preferred_element_type=f32)
+    mean = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(o - mean), axis=-1, keepdims=True)
+    y = ((o - mean) * jax.lax.rsqrt(var + eps) * gamma.astype(f32)
+         + beta.astype(f32)).astype(a.dtype)
+    z = jnp.einsum("bijc,cd->bijd", y, w_out.astype(a.dtype),
+                   preferred_element_type=f32) + b_out.astype(f32)
+    s = jax.nn.sigmoid(g_lin.astype(f32) + g_bias.astype(f32))
+    return (s * z).astype(g_lin.dtype)
+
+
+def outer_product_mean_ref(
+    a: jax.Array,
+    b_full: jax.Array,
+    mask_a: jax.Array,
+    mask_b: jax.Array,
+    w: jax.Array,
+    bias: jax.Array,
+) -> jax.Array:
+    """Materialized oracle for ops.fused_outer_product_mean.
+
+    a: (B, S, I, C), b_full: (B, S, J, C) masked projections (b gathered
+    under DAP); mask_a: (B, S, I), mask_b: (B, S, J); w: (C*C, D), bias (D,).
+
+    out[b,i,j] = (vec(sum_s a_si ⊗ b_sj) / (norm_ij + 1e-3)) @ w + bias with
+    norm = sum_s mask_a·mask_b — fp32 outer product and normalization.
+    Materializes the full (B, I, J, C, C) transient; the fused legs keep it
+    tile-bounded.
+    """
+    f32 = jnp.float32
+    o = jnp.einsum("bsic,bsjd->bijcd", a, b_full, preferred_element_type=f32)
+    norm = jnp.einsum("bsi,bsj->bij", mask_a.astype(f32), mask_b.astype(f32))
+    ov = (o / (norm[..., None, None] + 1e-3)).astype(a.dtype)
+    out = jnp.einsum("bijx,xd->bijd", ov.reshape(ov.shape[:3] + (-1,)),
+                     w.astype(a.dtype), preferred_element_type=f32)
+    return (out + bias.astype(f32)).astype(a.dtype)
+
+
 def layer_norm_ref(
     x: jax.Array,
     gamma: jax.Array,

@@ -6,15 +6,20 @@ static tensor shapes of a forward pass, the compute dtype, and the per-chip
 HBM budget (``launch.mesh.HBM_BYTES``), it picks
 
   * ``inference_chunk`` — paper-§V.C group chunking of the attention sites,
-  * ``opm_chunk``       — Outer-Product-Mean j-chunking,
+  * ``opm_chunk``       — Outer-Product-Mean j-chunking (materialized path),
   * ``attn_kv_tile``    — KV tile of the fused flash-attention kernel
                           (forward tile and backward recompute block),
+  * ``tri_k_tile``      — tile of the fused triangle-mult kernel (Pallas k
+                          accumulation tile / XLA j block / bwd recompute),
+  * ``opm_s_tile``      — tile of the fused outer-product-mean kernel
+                          (Pallas s tile / XLA j block / bwd recompute),
 
 as the LEAST-chunked settings whose modeled peak activation bytes fit the
 budget (0 = knob off / kernel default — selected whenever the unchunked plan
 fits). Chunk knobs serialize compute, so the preference order when shrinking
-is: KV tile first (near-free: still one pass over KV), then OPM j-chunk
-(scan), then inference_chunk (whole attention sites serialized).
+is: kernel tiles first (near-free: still one sweep over the data — KV tile,
+then triangle/OPM tiles), then OPM j-chunk (scan), then inference_chunk
+(whole attention sites serialized).
 
 Contract:
   * Planning is pure Python over static shapes — it runs at trace time
@@ -37,7 +42,11 @@ from dataclasses import dataclass
 
 import jax.numpy as jnp
 
-from repro.kernels.ops import _DEFAULT_KV_TILE
+from repro.kernels.ops import (
+    _DEFAULT_KV_TILE,
+    _DEFAULT_OPM_TILE,
+    _DEFAULT_TRI_TILE,
+)
 from repro.launch.mesh import HBM_BYTES
 
 
@@ -100,6 +109,57 @@ def attention_transient_bytes(
     return qkvo + 2 * groups * heads * seq * kv * dtype_bytes
 
 
+def triangle_transient_bytes(
+    rows_loc: int,
+    n_res: int,
+    c_mult: int,
+    *,
+    tile: int = 0,
+    fused: bool = True,
+    dtype_bytes: int = 2,
+) -> int:
+    """Peak transient of one triangular multiplicative update over
+    ``rows_loc`` local pair rows.
+
+    fused (ops.fused_triangle_mult): the merged a/gate projections plus the
+    gathered (r, k, c) right operand in compute dtype, plus the fp32
+    j-block product of the kernel's sweep / the backward's recompute scan —
+    bounded by the tile, not by r.
+
+    materialized: same operands plus the full (rows_loc, r, c) fp32 product
+    the LayerNorm reads.
+    """
+    operands = c_mult * dtype_bytes * (4 * rows_loc * n_res
+                                       + n_res * n_res)
+    if fused:
+        blk = _eff_chunk(n_res, tile or _DEFAULT_TRI_TILE)
+        return operands + rows_loc * blk * c_mult * 4
+    return operands + rows_loc * n_res * c_mult * 4
+
+
+def opm_transient_bytes(
+    rows_loc: int,
+    n_res: int,
+    n_seq: int,
+    c_opm: int,
+    *,
+    tile: int = 0,
+    opm_chunk: int = 0,
+    fused: bool = True,
+    dtype_bytes: int = 2,
+) -> int:
+    """Peak transient of the Outer-Product-Mean over ``rows_loc`` local pair
+    rows: the gathered right projection plus the fp32 (rows_loc, j, c, c)
+    outer-product block — j bounded by the fused op's tile (s/j sweep) or,
+    on the materialized path, by the opm_chunk scan (full r when off)."""
+    gathered = n_seq * n_res * c_opm * dtype_bytes
+    if fused:
+        jc = _eff_chunk(n_res, tile or _DEFAULT_OPM_TILE)
+    else:
+        jc = _eff_div_chunk(n_res, opm_chunk)
+    return gathered + rows_loc * jc * c_opm * c_opm * 4
+
+
 def evoformer_peak_bytes(
     cfg,
     *,
@@ -111,6 +171,8 @@ def evoformer_peak_bytes(
     inference_chunk: int = 0,
     opm_chunk: int = 0,
     attn_kv_tile: int = 0,
+    tri_k_tile: int = 0,
+    opm_s_tile: int = 0,
 ) -> dict:
     """Dominant per-device activation terms (bytes) of one Evoformer block.
 
@@ -129,9 +191,11 @@ def evoformer_peak_bytes(
         # Gathered (B, H, r, r) pair-bias tensors — not chunkable.
         "pair_bias": batch * max(cfg.msa_heads, cfg.pair_heads)
         * n_res * n_res * dt,
-        # Triangular-mult a/b projections + the gathered b_full operand.
-        "tri_mult": batch * cfg.tri_mult_dim * dt
-        * (2 * r_loc * n_res + n_res * n_res),
+        # Triangular mult: projections + gathered operand + the product
+        # block (fp32 full row when materialized, tile-bounded when fused).
+        "tri_mult": batch * triangle_transient_bytes(
+            r_loc, n_res, cfg.tri_mult_dim, tile=tri_k_tile, fused=fused,
+            dtype_bytes=dt),
     }
     # Attention: MSA row (groups = local MSA rows) and triangle (groups =
     # local pair rows) phases don't overlap — take the max.
@@ -142,11 +206,11 @@ def evoformer_peak_bytes(
         batch * _eff_div_chunk(r_loc, inference_chunk), cfg.pair_heads, n_res,
         cfg.head_dim, kv_tile=attn_kv_tile, fused=fused, dtype_bytes=dt)
     terms["attention"] = max(attn_row, attn_tri)
-    # Outer Product Mean: fp32 (i_loc, jc, c, c) intermediate + gathered
-    # right-projection operand.
-    jc = _eff_div_chunk(n_res, opm_chunk)
-    terms["opm"] = (batch * r_loc * jc * cfg.opm_dim * cfg.opm_dim * 4
-                    + batch * n_seq * n_res * cfg.opm_dim * dt)
+    # Outer Product Mean: gathered right projection + the fp32 outer-product
+    # block (opm_s_tile-bounded when fused, opm_chunk scan otherwise).
+    terms["opm"] = batch * opm_transient_bytes(
+        r_loc, n_res, n_seq, cfg.opm_dim, tile=opm_s_tile,
+        opm_chunk=opm_chunk, fused=fused, dtype_bytes=dt)
     return terms
 
 
@@ -163,16 +227,24 @@ class ChunkPlan:
     est_bytes: int = 0
     budget_bytes: int = 0
     fits: bool = True
+    # Appended fields (keep positional compatibility with older callers):
+    # tiles of the fused triangle-mult / outer-product-mean kernels
+    # (0 = kernel default — already tile-bounded).
+    tri_k_tile: int = 0
+    opm_s_tile: int = 0
 
     def describe(self) -> str:
         return (f"ic={self.inference_chunk} oc={self.opm_chunk} "
-                f"kt={self.attn_kv_tile} est={self.est_bytes >> 20}MB "
+                f"kt={self.attn_kv_tile} tt={self.tri_k_tile} "
+                f"ot={self.opm_s_tile} est={self.est_bytes >> 20}MB "
                 f"budget={self.budget_bytes >> 20}MB fits={self.fits}")
 
 
 _IC_CANDIDATES = (0, 256, 128, 64, 32, 16, 8, 4, 2, 1)
 _OC_CANDIDATES = (0, 1024, 512, 256, 128, 64, 32, 16, 8)
 _KT_CANDIDATES = (0, 256, 128)
+_TT_CANDIDATES = (0, 64, 32, 16)    # triangle tile below its default 128
+_OT_CANDIDATES = (0, 64, 32, 16)    # OPM tile below its default 128
 
 
 def _knob_candidates(fixed: int, options, limit: int):
@@ -217,19 +289,26 @@ def plan_evoformer_chunks(
     ocs = _div_candidates(cfg.opm_chunk, _OC_CANDIDATES, n_res)
     kts = _knob_candidates(getattr(cfg, "attn_kv_tile", 0), _KT_CANDIDATES,
                            n_res if fused else 1)
+    lim = n_res if fused else 1
+    tts = _knob_candidates(getattr(cfg, "tri_k_tile", 0), _TT_CANDIDATES, lim)
+    ots = _knob_candidates(getattr(cfg, "opm_s_tile", 0), _OT_CANDIDATES, lim)
 
-    def est(ic, oc, kt) -> int:
+    def est(ic, oc, kt, tt, ot) -> int:
         return sum(evoformer_peak_bytes(
             cfg, batch=batch, n_seq=n_seq, n_res=n_res, dap=dap, fused=fused,
-            inference_chunk=ic, opm_chunk=oc, attn_kv_tile=kt).values())
+            inference_chunk=ic, opm_chunk=oc, attn_kv_tile=kt,
+            tri_k_tile=tt, opm_s_tile=ot).values())
 
-    def serialization_cost(ic, oc, kt):
+    def serialization_cost(ic, oc, kt, tt, ot):
         # Lexicographic preference: avoid/maximize inference_chunk first
-        # (whole sites serialized), then opm_chunk, then the KV tile.
+        # (whole sites serialized), then opm_chunk (scan), then the kernel
+        # tiles (near-free: still one sweep each).
         return (
             _ceil_div(groups, ic) if ic else 0,
             _ceil_div(n_res, oc) if oc else 0,
             _ceil_div(n_res, kt) if kt else 0,
+            _ceil_div(n_res, tt) if tt else 0,
+            _ceil_div(n_res, ot) if ot else 0,
         )
 
     best = None          # least serialization among fitting plans
@@ -237,17 +316,20 @@ def plan_evoformer_chunks(
     for ic in ics:
         for oc in ocs:
             for kt in kts:
-                e = est(ic, oc, kt)
-                key = serialization_cost(ic, oc, kt)
-                if smallest is None or e < smallest[0]:
-                    smallest = (e, ic, oc, kt)
-                if e <= budget_bytes and (best is None or key < best[0]):
-                    best = (key, e, ic, oc, kt)
+                for tt in tts:
+                    for ot in ots:
+                        e = est(ic, oc, kt, tt, ot)
+                        key = serialization_cost(ic, oc, kt, tt, ot)
+                        if smallest is None or e < smallest[0]:
+                            smallest = (e, ic, oc, kt, tt, ot)
+                        if e <= budget_bytes and (best is None
+                                                  or key < best[0]):
+                            best = (key, e, ic, oc, kt, tt, ot)
     if best is not None:
-        _, e, ic, oc, kt = best
-        return ChunkPlan(ic, oc, kt, e, budget_bytes, fits=True)
-    e, ic, oc, kt = smallest
-    return ChunkPlan(ic, oc, kt, e, budget_bytes, fits=False)
+        _, e, ic, oc, kt, tt, ot = best
+        return ChunkPlan(ic, oc, kt, e, budget_bytes, True, tt, ot)
+    e, ic, oc, kt, tt, ot = smallest
+    return ChunkPlan(ic, oc, kt, e, budget_bytes, False, tt, ot)
 
 
 def apply_plan(cfg, plan: ChunkPlan):
@@ -258,6 +340,8 @@ def apply_plan(cfg, plan: ChunkPlan):
         inference_chunk=cfg.inference_chunk or plan.inference_chunk,
         opm_chunk=cfg.opm_chunk or plan.opm_chunk,
         attn_kv_tile=cfg.attn_kv_tile or plan.attn_kv_tile,
+        tri_k_tile=getattr(cfg, "tri_k_tile", 0) or plan.tri_k_tile,
+        opm_s_tile=getattr(cfg, "opm_s_tile", 0) or plan.opm_s_tile,
     )
 
 

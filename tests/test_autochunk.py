@@ -62,8 +62,8 @@ def test_tighter_budget_never_less_chunking():
     tight = plan_evoformer_chunks(EVO, batch=1, n_seq=16, n_res=128,
                                   budget_bytes=base.est_bytes // 2)
     assert tight.est_bytes <= base.est_bytes
-    assert (tight.inference_chunk, tight.opm_chunk,
-            tight.attn_kv_tile) != (0, 0, 0)
+    assert (tight.inference_chunk, tight.opm_chunk, tight.attn_kv_tile,
+            tight.tri_k_tile, tight.opm_s_tile) != (0, 0, 0, 0, 0)
 
 
 def test_dap_relieves_memory_pressure():
@@ -144,8 +144,8 @@ def test_alphafold_forward_resolves_chunks():
     tight = base.est_bytes // 2
     plan = plan_evoformer_chunks(SMOKE.evoformer, batch=1, n_seq=8, n_res=24,
                                  budget_bytes=tight)
-    assert (plan.inference_chunk, plan.opm_chunk, plan.attn_kv_tile) != \
-        (0, 0, 0)
+    assert (plan.inference_chunk, plan.opm_chunk, plan.attn_kv_tile,
+            plan.tri_k_tile, plan.opm_s_tile) != (0, 0, 0, 0, 0)
     # Same tight budget through the real forward-level resolve branch.
     out_chunk = alphafold_forward(params, batch, SMOKE, n_recycle=0,
                                   hbm_budget=tight)

@@ -142,6 +142,45 @@ def test_bias_sigmoid_mul(dtype):
                                np.asarray(want, np.float32), **tols(dtype))
 
 
+@pytest.mark.parametrize("shape", [(16, 64), (3, 7, 130), (2, 5, 9, 96),
+                                   (2, 3, 4, 5, 32)])
+def test_layernorm_rank_polymorphic(shape):
+    """2D-4D inputs run the kernel WITHOUT a row-flatten (grid over leading
+    dims — mesh-sharded dims stay unmerged under GSPMD); 5D+ falls back to
+    the flattened layout. Values and VJP reductions must be rank-agnostic."""
+    c = shape[-1]
+    x = jax.random.normal(jax.random.PRNGKey(1), shape) * 2 + 1
+    g = jax.random.normal(jax.random.PRNGKey(2), (c,))
+    b = jax.random.normal(jax.random.PRNGKey(3), (c,))
+    np.testing.assert_allclose(np.asarray(ops.layer_norm(x, g, b)),
+                               np.asarray(ref.layer_norm_ref(x, g, b)),
+                               atol=1e-5)
+    g1 = jax.grad(lambda *a: jnp.sum(jnp.sin(ops.layer_norm(*a))),
+                  argnums=(0, 1, 2))(x, g, b)
+    g2 = jax.grad(lambda *a: jnp.sum(jnp.sin(ref.layer_norm_ref(*a))),
+                  argnums=(0, 1, 2))(x, g, b)
+    for a, bb in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bb), atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(16, 64), (3, 7, 130), (2, 5, 9, 96),
+                                   (2, 3, 4, 5, 32)])
+def test_bias_sigmoid_mul_rank_polymorphic(shape):
+    c = shape[-1]
+    g = jax.random.normal(jax.random.PRNGKey(1), shape)
+    v = jax.random.normal(jax.random.PRNGKey(2), shape)
+    bg = jax.random.normal(jax.random.PRNGKey(3), (c,))
+    np.testing.assert_allclose(np.asarray(ops.bias_sigmoid_mul(g, bg, v)),
+                               np.asarray(ref.bias_sigmoid_mul_ref(g, bg, v)),
+                               atol=1e-6)
+    g1 = jax.grad(lambda *a: jnp.sum(jnp.sin(ops.bias_sigmoid_mul(*a))),
+                  argnums=(0, 1, 2))(g, bg, v)
+    g2 = jax.grad(lambda *a: jnp.sum(jnp.sin(ref.bias_sigmoid_mul_ref(*a))),
+                  argnums=(0, 1, 2))(g, bg, v)
+    for a, bb in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bb), atol=1e-5)
+
+
 def test_bias_dropout_add_deterministic():
     x = jax.random.normal(jax.random.PRNGKey(0), (4, 96))
     r = jax.random.normal(jax.random.PRNGKey(1), (4, 96))
