@@ -18,10 +18,12 @@ leg (interpret-mode Pallas only under REPRO_PALLAS_INTERPRET=1, the
 kernel-validation leg); the bytes columns are backend-independent.
 
 Backward-leg A/B (``attn_bwd_*`` rows): the fused path's *active* backward
-(the fused Pallas kernel on TPU / under REPRO_PALLAS_INTERPRET=1; the jnp
-KV-scan elsewhere) vs the jnp KV-scan forced via ops.FORCE_SCAN_ATTN_BWD —
-the acceptance gate is active-bwd no slower than the scan at Evoformer
-shapes on the kernel's target backend.
+(the fused Pallas kernel on TPU / under the interpret plan; the jnp KV-scan
+elsewhere) vs the jnp KV-scan pinned via a
+``use_plan(KernelPolicy(attn_bwd='scan'))`` scope — a data value, not a
+module-global mutation, so interleaved A/B cells cannot leak state into each
+other. The acceptance gate is active-bwd no slower than the scan at
+Evoformer shapes on the kernel's target backend.
 """
 import functools
 
@@ -29,11 +31,19 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import csv_row, time_fn
+from repro.exec.plan import current_plan, use_plan
 from repro.kernels import ops
 from repro.layers.attention import evoformer_attention
 from repro.memory.autochunk import attention_transient_bytes
 
 KV_TILE = 128
+
+
+def _scan_bwd_plan():
+    """The A/B cell's scan-backward plan: identical to the AMBIENT plan at
+    run time (not import time — a driver may scope use_plan around run())
+    except the attention backward is pinned to the jnp KV-scan recompute."""
+    return current_plan().with_kernels(attn_bwd="scan")
 
 
 def _inputs(g, h, s, d, dtype=jnp.float32, seed=0):
@@ -105,25 +115,29 @@ def run():
         csv_row(f"attn_fused_vs_materialized_fwdbwd_g{g}s{s}", 0,
                 f"ratio={ratio:.2f}x (backend={backend})")
 
-        # Backward-leg A/B: active fused backward vs forced jnp KV-scan.
-        def grad_fn():
-            return jax.jit(jax.grad(
-                lambda q_, k_, v_: jnp.sum(ops.fused_attention(
-                    q_, k_, v_, bias=bias, mask=mask, kv_tile=KV_TILE) ** 2),
-                argnums=(0, 1, 2)))
+        # Backward-leg A/B: active fused backward vs pinned jnp KV-scan.
+        # The scan variant scopes use_plan around the op call, so the
+        # backward-leg choice is baked into that trace only — the active
+        # variant's jit wrapper is untouched (no global to leak).
+        def active_loss(q_, k_, v_):
+            return jnp.sum(ops.fused_attention(
+                q_, k_, v_, bias=bias, mask=mask, kv_tile=KV_TILE) ** 2)
 
-        f_active = grad_fn()
+        scan_plan = _scan_bwd_plan()
+
+        def scan_loss(q_, k_, v_):
+            with use_plan(scan_plan):
+                return jnp.sum(ops.fused_attention(
+                    q_, k_, v_, bias=bias, mask=mask, kv_tile=KV_TILE) ** 2)
+
+        f_active = jax.jit(jax.grad(active_loss, argnums=(0, 1, 2)))
         t_active = time_fn(lambda *_: f_active(q, k, v), None, iters=5,
                            warmup=2)
-        old = ops.FORCE_SCAN_ATTN_BWD
-        try:
-            ops.FORCE_SCAN_ATTN_BWD = True
-            f_scan = grad_fn()  # fresh jit wrapper -> retraces with the flag
-            t_scan = time_fn(lambda *_: f_scan(q, k, v), None, iters=5,
-                             warmup=2)
-        finally:
-            ops.FORCE_SCAN_ATTN_BWD = old
-        active_leg = "pallas" if ops._pallas_enabled() else "jnp-scan"
+        f_scan = jax.jit(jax.grad(scan_loss, argnums=(0, 1, 2)))
+        t_scan = time_fn(lambda *_: f_scan(q, k, v), None, iters=5,
+                         warmup=2)
+        active_leg = ("pallas" if ops._use_pallas(ops.kernel_leg("attention"))
+                      else "jnp-scan")
         csv_row(f"attn_bwd_active_g{g}s{s}", t_active, f"leg={active_leg}")
         csv_row(f"attn_bwd_scan_g{g}s{s}", t_scan, "leg=jnp-scan")
         csv_row(f"attn_bwd_active_vs_scan_g{g}s{s}", 0,

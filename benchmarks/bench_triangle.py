@@ -8,10 +8,14 @@ Two executions of each chain:
                 j-block scan for the triangle, the reassociated contraction
                 for the OPM — no (B, r, r, c, c) tensor exists at all) with
                 the recompute custom_vjp (inputs + per-tile stats + output).
-  materialized  ref.triangle_mult_ref / ref.outer_product_mean_ref — the
-                pre-kernel jnp path: the full (B, r, r, c) fp32 product /
-                (B, r, r, c, c) outer-product transient in HBM, autodiff
-                backward storing them as residuals.
+  materialized  the same ops entry points inside a
+                ``use_plan(... triangle='oracle', opm='oracle')`` scope —
+                the pre-kernel jnp path (ref.triangle_mult_ref /
+                ref.outer_product_mean_ref): the full (B, r, r, c) fp32
+                product / (B, r, r, c, c) outer-product transient in HBM,
+                autodiff backward storing them as residuals. Scoping the
+                plan per variant (instead of flipping env vars) keeps the
+                interleaved A/B cells leak-free.
 
 For each shape: forward and forward+backward wall time plus the modeled
 peak transient bytes (repro.memory.autochunk.triangle_transient_bytes /
@@ -33,10 +37,27 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import csv_row, time_fn
-from repro.kernels import ops, ref
+from repro.exec.plan import current_plan, use_plan
+from repro.kernels import ops
 from repro.memory.autochunk import opm_transient_bytes, triangle_transient_bytes
 
 TILE = 128
+
+def _oracle_plan():
+    """Materialized-variant plan: the AMBIENT plan at call time (not import
+    time) with only the pair-stack ops pinned to their jnp oracles (the
+    ci.sh "triangle-oracle" leg as a data value)."""
+    return current_plan().with_kernels(triangle="oracle", opm="oracle")
+
+
+def _materialized_tri(*args):
+    with use_plan(_oracle_plan()):
+        return ops.fused_triangle_mult(*args)
+
+
+def _materialized_opm(*args):
+    with use_plan(_oracle_plan()):
+        return ops.fused_outer_product_mean(*args)
 
 
 def _tri_inputs(r, c, d, seed=0):
@@ -121,7 +142,7 @@ def run():
         t_times = _ab(
             f"tri_r{r}c{c}",
             functools.partial(ops.fused_triangle_mult, tile=TILE),
-            ref.triangle_mult_ref,
+            _materialized_tri,
             targs, (0, 3, 8),
             triangle_transient_bytes(r, r, c, tile=TILE, fused=True,
                                      dtype_bytes=4),
@@ -133,7 +154,7 @@ def run():
         o_times = _ab(
             f"opm_r{r}",
             functools.partial(ops.fused_outer_product_mean, tile=TILE),
-            ref.outer_product_mean_ref,
+            _materialized_opm,
             oargs, (0, 1),
             opm_transient_bytes(r, r, s, c_opm, tile=TILE, fused=True,
                                 dtype_bytes=4),

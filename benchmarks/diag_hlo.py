@@ -14,11 +14,11 @@ import sys
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 INNER = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-os.environ["REPRO_DISABLE_KERNELS"] = "1"
+# dryrun sets the 512-device XLA flag (via exec/envcompat) before jax init;
+# the materialized-path HLO comes from a use_plan("oracle") scope, not env.
 import re, jax, dataclasses
 from repro.launch import dryrun
+from repro.exec.plan import preset, use_plan
 from repro.roofline import analysis as A
 
 arch, shape_name, top_n = {arch!r}, {shape!r}, {top}
@@ -35,7 +35,7 @@ else:
     shape = dryrun.INPUT_SHAPES[shape_name]
     kind = shape.kind
     fn, args, in_sh, out_sh = dryrun.BUILDERS[kind](cfg, shape, mesh)
-with jax.set_mesh(mesh):
+with jax.set_mesh(mesh), use_plan(preset("oracle")):
     compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*args).compile()
 txt = compiled.as_text()
 comps = A._split_computations(txt)

@@ -71,12 +71,13 @@ PAIRS = {
 }
 
 RUN_ONE = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-os.environ["REPRO_DISABLE_KERNELS"] = "1"
+# dryrun sets the 512-device XLA flag (via exec/envcompat) before jax init;
+# the materialized-path baseline runs under a use_plan("oracle") scope.
 import json, sys
 from repro.launch import dryrun
-rec = dryrun.run_one({arch!r}, {shape!r}, overrides={overrides!r})
+from repro.exec.plan import preset, use_plan
+with use_plan(preset("oracle")):
+    rec = dryrun.run_one({arch!r}, {shape!r}, overrides={overrides!r})
 print("JSON::" + json.dumps(rec))
 """
 

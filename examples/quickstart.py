@@ -2,9 +2,12 @@
 
   PYTHONPATH=src python examples/quickstart.py
 
-1. Build a reduced AlphaFold, run folding inference (the paper's model).
-2. Run one DAP-style training step.
-3. Build an assigned LLM arch and generate tokens through the serving engine.
+1. Build a reduced AlphaFold behind the FastFold facade — one object binding
+   (AlphaFoldConfig, ExecutionPlan) — and run folding inference.
+2. Run one DAP-style training step through the same facade.
+3. Serve mixed-plan folding traffic (an oracle-leg canary request beside the
+   production-leg request) from the one bound session.
+4. Build an assigned LLM arch and generate tokens through the serving engine.
 """
 import jax
 import jax.numpy as jnp
@@ -12,33 +15,39 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.configs.alphafold import SMOKE
-from repro.core.alphafold import (alphafold_forward, alphafold_train_loss,
-                                  init_alphafold)
 from repro.data import protein_batches
+from repro.exec import ExecutionPlan, FastFold
 from repro.models.decoder import init_model
 from repro.serving.engine import ServingEngine
 from repro.train.loop import make_train_step
 
 # --- 1. AlphaFold inference -------------------------------------------------
 print("== AlphaFold (reduced) folding inference ==")
-params = init_alphafold(jax.random.PRNGKey(0), SMOKE)
+ff = FastFold(SMOKE, ExecutionPlan())       # config + execution policy, once
+params = ff.init(jax.random.PRNGKey(0))
 pb = next(protein_batches(batch=1, n_seq=8, n_res=16, seed=0))
 batch = {k: jnp.asarray(getattr(pb, k)) for k in
          ("msa", "msa_mask", "residue_index", "aatype", "seq_mask",
           "pseudo_beta", "bert_mask", "true_msa")}
-out = alphafold_forward(params, batch, SMOKE)  # recycling included
+out = ff.forward(params, batch)             # recycling included
 print("predicted CA coords:", out["coords"].shape,
       "distogram:", out["distogram_logits"].shape)
 
 # --- 2. one training step ----------------------------------------------------
 print("== one AlphaFold training step ==")
-init_state, train_step = make_train_step(
-    lambda p, b, r: alphafold_train_loss(p, b, SMOKE, rng=r), base_lr=1e-3)
+init_state, train_step = make_train_step(ff.loss_fn, base_lr=1e-3)
 state = init_state(params)
 state, metrics = jax.jit(train_step)(state, batch, jax.random.PRNGKey(1))
 print({k: round(float(v), 3) for k, v in metrics.items()})
 
-# --- 3. LLM serving (assigned architecture) ----------------------------------
+# --- 3. mixed-plan folding serving -------------------------------------------
+print("== mixed-plan folding requests (production + oracle canary) ==")
+canary_plan = ff.plan.with_kernels(enabled=False)   # jnp-oracle leg
+outs = ff.serve(params, [batch, batch], plans=[None, canary_plan])
+drift = float(jnp.max(jnp.abs(outs[0]["coords"] - outs[1]["coords"])))
+print(f"production vs oracle-canary coords drift: {drift:.2e}")
+
+# --- 4. LLM serving (assigned architecture) ----------------------------------
 print("== qwen2 (reduced) serving ==")
 cfg = get_config("qwen2-1.5b", reduced_variant=True)
 lm_params = init_model(jax.random.PRNGKey(0), cfg)

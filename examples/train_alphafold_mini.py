@@ -16,8 +16,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import alphafold as afc
-from repro.core.alphafold import alphafold_train_loss, init_alphafold
 from repro.data import protein_batches
+from repro.exec.plan import PRESETS, preset
+from repro.exec.session import FastFold
 from repro.layers.params import count_params
 from repro.train.checkpoint import latest_checkpoint, restore_checkpoint, \
     save_checkpoint
@@ -34,15 +35,20 @@ def main():
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default="/tmp/af_mini_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--plan", default="default", choices=sorted(PRESETS),
+                    help="ExecutionPlan preset the session binds")
     args = ap.parse_args()
 
     cfg = afc.SMOKE if args.config == "smoke" else afc.MINI
-    params = init_alphafold(jax.random.PRNGKey(0), cfg)
-    print(f"config={args.config} params={count_params(params):,}")
+    # The FastFold facade binds (config, plan) once: the train-loss closure it
+    # hands make_train_step carries the kernel/parallel/memory policy.
+    ff = FastFold(cfg, preset(args.plan))
+    params = ff.init(jax.random.PRNGKey(0))
+    print(f"config={args.config} plan={args.plan} "
+          f"params={count_params(params):,}")
 
     init_state, train_step = make_train_step(
-        lambda p, b, r: alphafold_train_loss(p, b, cfg, rng=r),
-        base_lr=args.lr, warmup_steps=20, total_steps=args.steps)
+        ff.loss_fn, base_lr=args.lr, warmup_steps=20, total_steps=args.steps)
     state = init_state(params)
 
     ckpt = latest_checkpoint(args.ckpt_dir)

@@ -1,35 +1,39 @@
 #!/usr/bin/env bash
-# Tier-1 CI, five legs:
-#   1. default          — Pallas kernels enabled; on CPU each op runs its
-#                         XLA-native leg (fused attention = online-softmax
-#                         scan, fused triangle/OPM = j-block scans), on TPU
-#                         the Pallas kernels.
-#   2. kernels disabled — REPRO_DISABLE_KERNELS=1: pure-jnp oracles, the
+# Tier-1 CI, five legs — each leg is a named ExecutionPlan preset selected
+# through the single REPRO_PLAN entry point (resolved by the one env-compat
+# module, src/repro/exec/envcompat.py -> repro.exec.plan.PRESETS):
+#   1. default          — KernelPolicy(enabled=True): Pallas kernels on TPU;
+#                         on CPU each op runs its XLA-native leg (fused
+#                         attention = online-softmax scan, fused
+#                         triangle/OPM = j-block scans).
+#   2. oracle           — KernelPolicy(enabled=False): pure-jnp oracles, the
 #                         scores-materialized attention, and the
 #                         materialized pair-stack paths (A/B legs).
-#   3. kernel validation— REPRO_PALLAS_INTERPRET=1: the Pallas kernels
+#   3. interpret        — KernelPolicy(interpret=True): the Pallas kernels
 #                         (fwd + the fused attention backward + the fused
 #                         triangle/OPM forwards) execute in interpret mode
 #                         on the kernel test modules.
-#   4. triangle oracle  — REPRO_FORCE_TRIANGLE_ORACLE=1: tier-1 with ONLY
-#                         the new pair-stack kernels pinned to their jnp
-#                         oracles (the rest of the kernel set stays on its
-#                         default legs) — isolates regressions to the
-#                         triangle/OPM fusion itself.
+#   4. triangle-oracle  — KernelPolicy(triangle='oracle', opm='oracle'):
+#                         tier-1 with ONLY the pair-stack kernels pinned to
+#                         their jnp oracles (the rest of the kernel set
+#                         stays on its default legs) — isolates regressions
+#                         to the triangle/OPM fusion itself.
 #   5. multi-device     — 8 host devices: distributed DAP/GSPMD parity, the
 #                         shard-mapped fused attention + triangle/OPM, and
 #                         the fused attention suite, on both kernel legs.
 # Any divergence between a kernel and its oracle fails fast in legs 1/3;
 # legs 2/4 prove the fallback paths stay healthy on their own.
+# A final grep gate asserts os.environ access stays confined to the compat
+# module (tests/test_exec_plan.py enforces the same in-suite).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "=== tier-1 leg 1/5: kernels ENABLED (XLA-native legs off-TPU) ==="
+echo "=== tier-1 leg 1/5: plan preset 'default' (XLA-native legs off-TPU) ==="
 python -m pytest -x -q "$@"
 
-echo "=== tier-1 leg 2/5: kernels DISABLED (REPRO_DISABLE_KERNELS=1, oracle paths) ==="
-REPRO_DISABLE_KERNELS=1 python -m pytest -x -q "$@"
+echo "=== tier-1 leg 2/5: plan preset 'oracle' (REPRO_PLAN=oracle, jnp paths) ==="
+REPRO_PLAN=oracle python -m pytest -x -q "$@"
 
 if [ "$#" -gt 0 ]; then
     # Scoped developer run: legs 3-5 run fixed module lists that would ignore
@@ -38,19 +42,28 @@ if [ "$#" -gt 0 ]; then
     exit 0
 fi
 
-echo "=== tier-1 leg 3/5: Pallas interpret validation (REPRO_PALLAS_INTERPRET=1) ==="
-REPRO_PALLAS_INTERPRET=1 python -m pytest -x -q \
+echo "=== tier-1 leg 3/5: plan preset 'interpret' (Pallas interpret validation) ==="
+REPRO_PLAN=interpret python -m pytest -x -q \
     tests/test_kernels.py tests/test_fused_attention.py tests/test_triangle.py
 
-echo "=== tier-1 leg 4/5: triangle/OPM kernels forced to oracle (REPRO_FORCE_TRIANGLE_ORACLE=1) ==="
-REPRO_FORCE_TRIANGLE_ORACLE=1 python -m pytest -x -q \
+echo "=== tier-1 leg 4/5: plan preset 'triangle-oracle' (pair-stack kernels -> oracles) ==="
+REPRO_PLAN=triangle-oracle python -m pytest -x -q \
     tests/test_triangle.py tests/test_evoformer.py tests/test_fused_attention.py \
     tests/test_autochunk.py tests/test_alphafold.py
 
 echo "=== tier-1 leg 5/5: multi-device (8 host devices), both kernel legs ==="
 XLA_FLAGS="--xla_force_host_platform_device_count=8" python -m pytest -x -q \
     tests/test_distributed.py tests/test_fused_attention.py tests/test_triangle.py
-XLA_FLAGS="--xla_force_host_platform_device_count=8" REPRO_DISABLE_KERNELS=1 \
+XLA_FLAGS="--xla_force_host_platform_device_count=8" REPRO_PLAN=oracle \
     python -m pytest -x -q tests/test_distributed.py
+
+echo "=== grep gate: os.environ confined to src/repro/exec/envcompat.py ==="
+stray=$(grep -rn "os\.environ" src/repro --include="*.py" \
+        | grep -v "repro/exec/envcompat.py" || true)
+if [ -n "$stray" ]; then
+    echo "$stray"
+    echo "ci.sh: FAIL — os.environ access outside the env-compat module"
+    exit 1
+fi
 
 echo "ci.sh: all legs green"

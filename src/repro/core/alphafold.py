@@ -5,7 +5,15 @@ Chunking: ``alphafold_forward`` resolves the Evoformer chunk knobs through the
 AutoChunk planner (repro.memory.autochunk) at trace time — the largest
 settings whose modeled activation memory fits the per-chip HBM budget, no
 chunking when everything fits. Hand-set nonzero knobs and
-``evoformer.auto_chunk=False`` opt out."""
+``evoformer.auto_chunk=False`` opt out.
+
+Execution policy: the ``dist`` backend, the HBM budget, and AutoChunk knob
+overrides default to the context-local ExecutionPlan
+(``repro.exec.plan.current_plan()``) — ``with use_plan(plan):`` around a
+call (or the ``repro.exec.session.FastFold`` facade, which binds the plan
+once) steers them without kwarg plumbing. Explicit ``dist=`` /
+``hbm_budget=`` arguments still win for composition (the DAP drivers hand
+shard_map-local backends directly)."""
 from __future__ import annotations
 
 import dataclasses
@@ -15,7 +23,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.dist import LocalDist
+from repro.exec.plan import current_plan
 from repro.core.evoformer import (
     EvoformerConfig,
     evoformer_stack,
@@ -114,12 +122,15 @@ def embed_recycle(params, msa, pair, prev, cfg: AlphaFoldConfig):
 
 
 def alphafold_iteration(params, batch, prev, cfg: AlphaFoldConfig, *,
-                        dist=LocalDist(), rng=None, train=False):
+                        dist=None, rng=None, train=False):
     """One recycling iteration: embed -> Evoformer -> structure + heads.
 
     Under DAP the caller passes already-sharded batch tensors and a dist
     backend; embedding/heads/structure are element-wise or replicated-safe.
+    ``dist=None`` resolves the current plan's ParallelPolicy.
     """
+    if dist is None:
+        dist = current_plan().parallel.make_dist()
     dt = cfg.compute_dtype
     msa, pair = embed_inputs(params, batch, cfg)
     msa, pair = embed_recycle(params, msa, pair, prev, cfg)
@@ -151,21 +162,28 @@ def alphafold_iteration(params, batch, prev, cfg: AlphaFoldConfig, *,
 
 def alphafold_forward(params, batch, cfg: AlphaFoldConfig, *,
                       n_recycle: int | jax.Array | None = None,
-                      dist=LocalDist(), rng=None, train=False,
+                      dist=None, rng=None, train=False,
                       hbm_budget: int | None = None):
     """Full forward with recycling. Pre-final iterations run under
     stop_gradient (AlphaFold training recipe); the number of recycles can be a
     traced scalar (sampled per-batch during training, fixed 3 at inference).
 
     ``hbm_budget`` overrides the per-chip HBM budget the AutoChunk planner
-    resolves chunk knobs against (default: launch.mesh.HBM_BYTES)."""
+    resolves chunk knobs against (default: the current plan's
+    MemoryPolicy.hbm_budget, else launch.mesh.HBM_BYTES). ``dist=None``
+    resolves the current plan's ParallelPolicy; the plan's MemoryPolicy knob
+    overrides are applied to the Evoformer config before planning."""
+    plan = current_plan()
+    if dist is None:
+        dist = plan.parallel.make_dist()
+    evo_cfg = plan.memory.apply(cfg.evoformer)
     b, s, r = batch["msa"].shape
     # AutoChunk (trace-time, static shapes): fill chunk knobs left at 0 from
-    # the HBM budget instead of hand-set constants.
-    budget_kw = {} if hbm_budget is None else {"budget_bytes": hbm_budget}
+    # the HBM budget instead of hand-set constants. budget_bytes=None lets
+    # the planner resolve the plan's MemoryPolicy budget itself (one path).
     evo_cfg = resolve_evoformer_config(
-        cfg.evoformer, batch=b, n_seq=s, n_res=r,
-        dap=getattr(dist, "axis_size", 1), **budget_kw)
+        evo_cfg, batch=b, n_seq=s, n_res=r,
+        dap=getattr(dist, "axis_size", 1), budget_bytes=hbm_budget)
     if evo_cfg is not cfg.evoformer:
         cfg = dataclasses.replace(cfg, evoformer=evo_cfg)
     d_m, d_z = cfg.d_msa, cfg.d_pair
@@ -191,7 +209,7 @@ def alphafold_forward(params, batch, cfg: AlphaFoldConfig, *,
 
 
 def alphafold_train_loss(params, batch, cfg: AlphaFoldConfig, rng=None,
-                         n_recycle=None, dist=LocalDist()):
+                         n_recycle=None, dist=None):
     out = alphafold_forward(params, batch, cfg, n_recycle=n_recycle, dist=dist,
                             rng=rng, train=True)
     return alphafold_loss(out, batch)

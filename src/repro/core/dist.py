@@ -347,6 +347,24 @@ class GspmdDist:
             a, b_full, mask_a, mask_b, w, bias)
 
 
+def dist_from_policy(policy):
+    """Build the dist backend a ``repro.exec.plan.ParallelPolicy`` names —
+    the single place the plan's parallel policy turns into one of the three
+    backends above (``ParallelPolicy.make_dist`` delegates here). 'gspmd'
+    requires ``policy.mesh`` to carry the jax Mesh."""
+    if policy.backend == "local":
+        return LocalDist()
+    if policy.backend == "shard_map":
+        return ShardMapDist(axis=policy.axis)
+    if policy.backend == "gspmd":
+        if policy.mesh is None:
+            raise ValueError(
+                "ParallelPolicy(backend='gspmd') needs a mesh — e.g. "
+                "ParallelPolicy('gspmd', mesh=launch.mesh.make_host_mesh())")
+        return GspmdDist(mesh=policy.mesh, axis=policy.axis)
+    raise ValueError(f"unknown dist backend {policy.backend!r}")
+
+
 def batch_spec(mesh) -> tuple:
     """Mesh axes that shard the batch dimension: ('pod','data') or ('data',)."""
     return ("pod", "data") if "pod" in mesh.shape else ("data",)

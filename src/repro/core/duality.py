@@ -37,8 +37,25 @@ import re
 
 import jax
 
+from repro.exec.plan import current_plan
+
 
 @jax.custom_vjp
+def _overlap_window_op(comm_result, independent_result):
+    return jax.lax.optimization_barrier((comm_result, independent_result))
+
+
+def _overlap_window_fwd(comm_result, independent_result):
+    return _overlap_window_op(comm_result, independent_result), None
+
+
+def _overlap_window_bwd(_, g):
+    return jax.lax.optimization_barrier(g)
+
+
+_overlap_window_op.defvjp(_overlap_window_fwd, _overlap_window_bwd)
+
+
 def overlap_window(comm_result, independent_result):
     """Fence `independent_result` as not-reorderable *past* the communication:
     returns both, tied through an optimization barrier so the scheduler keeps
@@ -49,19 +66,15 @@ def overlap_window(comm_result, independent_result):
     the backward barriers the *cotangents* the same way — reverse-mode AD
     turns the forward collective into its dual collective, and the mirrored
     fence keeps the dual's launch->use window, which is exactly the paper's
-    forward/backward duality."""
-    return jax.lax.optimization_barrier((comm_result, independent_result))
+    forward/backward duality.
 
-
-def _overlap_window_fwd(comm_result, independent_result):
-    return overlap_window(comm_result, independent_result), None
-
-
-def _overlap_window_bwd(_, g):
-    return jax.lax.optimization_barrier(g)
-
-
-overlap_window.defvjp(_overlap_window_fwd, _overlap_window_bwd)
+    Gated by the ExecutionPlan's AsyncPolicy: with
+    ``plan.duality.overlap_windows == False`` this is a plain passthrough
+    (no barrier at all, forward or backward), so Duality-Async A/B cells are
+    a ``use_plan`` scope instead of code edits."""
+    if not current_plan().duality.overlap_windows:
+        return comm_result, independent_result
+    return _overlap_window_op(comm_result, independent_result)
 
 
 _COLLECTIVES = ("all-to-all", "all-gather", "all-reduce", "reduce-scatter",

@@ -25,10 +25,11 @@ gating, pair mask, output LayerNorm and output gate fused into one sweep —
 the (B, i, j, c) fp32 product never hits HBM at full size) and the
 Outer-Product-Mean routes ``dist.sharded_opm`` (s-tiled outer product with
 the fp32 mask-normalization and c²→d projection fused — no (B, i, j, c, c)
-transient). With ``REPRO_DISABLE_KERNELS=1`` (or out-of-envelope shapes)
-every site falls back to its materialized jnp path, kept for A/B and
-diagnosis; ``REPRO_FORCE_TRIANGLE_ORACLE=1`` pins just the triangle/OPM ops
-to their oracles. All LayerNorms go through the fused LN kernel; gating
+transient). Leg selection rides the context-local ExecutionPlan
+(repro.exec.plan): ``KernelPolicy(enabled=False)`` (or out-of-envelope
+shapes) sends every site to its materialized jnp path, kept for A/B and
+diagnosis; ``KernelPolicy(triangle='oracle', opm='oracle')`` pins just the
+triangle/OPM ops. All LayerNorms go through the fused LN kernel; gating
 through bias+sigmoid+mul; residual adds through bias+dropout+add with the
 AlphaFold shared-axis dropout mask. QKV and left/right projections use
 merged GEMMs.
@@ -48,6 +49,7 @@ import jax.numpy as jnp
 
 from repro.core import duality
 from repro.core.dist import LocalDist
+from repro.exec.plan import current_plan
 from repro.kernels import ops
 from repro.layers.attention import evoformer_attention, init_attention, AttnDims, \
     project_qkv, output_proj
@@ -206,9 +208,10 @@ def _gated_attention(p_attn, x_n, bias, key_mask, dims: AttnDims,
     the kernel over (batch_axes, 'model') so each device runs it on its
     local (B_loc, G_loc, S, H, D) shard with the gathered bias replicated —
     the production path executes the fused kernel instead of falling back.
-    With REPRO_DISABLE_KERNELS=1, out-of-envelope shapes, or a group dim
-    that doesn't divide the mesh, the scores-materialized path below runs
-    instead (A/B baseline; it never merges the (B, G) dims either).
+    With kernels disabled on the plan (KernelPolicy(enabled=False) /
+    attention='oracle'), out-of-envelope shapes, or a group dim that doesn't
+    divide the mesh, the scores-materialized path below runs instead (A/B
+    baseline; it never merges the (B, G) dims either).
 
     chunk > 0: the paper-§V.C chunking technique — G processed in sequential
     chunks, capping the attention transient at (B, chunk, H, S, *). Inference
@@ -331,7 +334,7 @@ def outer_product_mean(p, msa, msa_mask, dist, cfg: EvoformerConfig):
     # fused, so the (B, i/N, r, c, c) transient never hits HBM at full size.
     # GspmdDist shard_maps the op over (batch_axes, 'model') with b_full
     # replicated. The j-chunked jnp path below stays as the A/B baseline
-    # (REPRO_DISABLE_KERNELS / REPRO_FORCE_TRIANGLE_ORACLE).
+    # (plan legs: KernelPolicy(enabled=False) or opm='oracle').
     if (ops.fused_opm_supported(c, p["out"]["w"].shape[1], a.dtype)
             and dist.sharded_opm_supported(a.shape[2])):
         return dist.sharded_opm(a, b_full, msa_mask, mask_full,
@@ -379,8 +382,9 @@ def triangle_mult_core(p, z_src, pair_mask_loc, dist,
     gated half keeps the collective at (B, r, k, c)). GspmdDist shard_maps
     the op over (batch_axes, 'model') with b_full replicated, so the
     kernel's tiling only ever sees local (B_loc, i_loc, ...) blocks. The
-    materialized jnp path below stays behind REPRO_DISABLE_KERNELS /
-    REPRO_FORCE_TRIANGLE_ORACLE (and out-of-envelope shapes) for A/B.
+    materialized jnp path below stays behind the plan's oracle legs
+    (KernelPolicy(enabled=False) / triangle='oracle') and out-of-envelope
+    shapes for A/B.
     """
     c = cfg.tri_mult_dim
     ab = dense(p["proj"], z_src)                   # (B, p/N, k, 2c) merged
@@ -478,12 +482,15 @@ def evoformer_block(
     seq_mask: jax.Array,   # (B, r) replicated
     pair_mask_loc: jax.Array,  # (B, i/N, j)
     *,
-    dist=LocalDist(),
+    dist=None,
     cfg: EvoformerConfig,
     rng=None,
     train: bool = False,
 ):
-    """One Evoformer block under the DAP sharding state machine."""
+    """One Evoformer block under the DAP sharding state machine.
+    ``dist=None`` resolves the current ExecutionPlan's ParallelPolicy."""
+    if dist is None:
+        dist = current_plan().parallel.make_dist()
     rngs = list(jax.random.split(rng, 8)) if rng is not None else [None] * 8
 
     # ----- MSA stack (s-shard phase) -----
@@ -560,14 +567,17 @@ def evoformer_stack(
     seq_mask: jax.Array,
     pair_mask_loc: jax.Array,
     *,
-    dist=LocalDist(),
+    dist=None,
     cfg: EvoformerConfig,
     rng=None,
     train: bool = False,
     remat: bool = True,
 ):
     """scan over n_blocks Evoformer blocks (activation checkpointing per block,
-    as AlphaFold/the paper do — §III.B "gradient checkpointing")."""
+    as AlphaFold/the paper do — §III.B "gradient checkpointing").
+    ``dist=None`` resolves the current ExecutionPlan's ParallelPolicy."""
+    if dist is None:
+        dist = current_plan().parallel.make_dist()
     rngs = (jax.random.split(rng, cfg.n_blocks) if rng is not None
             else jnp.zeros((cfg.n_blocks, 2), jnp.uint32))
 

@@ -1,0 +1,26 @@
+"""Execution-policy package: the ExecutionPlan object, plan scoping, env
+compatibility, and the FastFold facade (see plan.py for the policy matrix).
+
+Importing this package (or repro.exec.plan / repro.exec.envcompat) never
+imports jax — launchers use ``envcompat.force_host_device_count`` before
+first jax init. ``FastFold`` (which does need jax) is re-exported lazily.
+"""
+from repro.exec.plan import (  # noqa: F401
+    AsyncPolicy,
+    ExecutionPlan,
+    KernelPolicy,
+    MemoryPolicy,
+    ParallelPolicy,
+    PRESETS,
+    current_plan,
+    preset,
+    use_plan,
+)
+
+
+def __getattr__(name):
+    if name == "FastFold":
+        from repro.exec.session import FastFold
+
+        return FastFold
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

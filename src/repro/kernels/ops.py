@@ -6,7 +6,7 @@ Each op:
     XLA-native leg with identical semantics (the jnp oracle for the
     element-wise/softmax/LN ops, the online-softmax lax.scan for fused
     attention) — interpret-mode Pallas is a per-grid-cell loop that only runs
-    when ``REPRO_PALLAS_INTERPRET=1`` (the kernel-validation CI leg),
+    when the plan asks for interpret mode (the kernel-validation CI leg),
   * carries a ``jax.custom_vjp``: fused attention pairs the forward with the
     fused Pallas backward (``flash_attention_bwd_pallas``) on the Pallas leg
     and with the jnp KV-scan recompute backward elsewhere; the remaining ops
@@ -14,18 +14,24 @@ Each op:
   * falls back to the pure-jnp oracle (ref.py) when the shape is outside the
     kernel envelope or kernels are globally disabled.
 
-Toggle: set REPRO_DISABLE_KERNELS=1 (or flip ``KERNELS_ENABLED``) to force
-oracle paths everywhere — used by A/B tests (the scores-materialized
-attention baseline in the Evoformer rides this toggle too).
+Toggle: every leg choice is read from the context-local ExecutionPlan
+(``repro.exec.plan.current_plan()`` / ``with use_plan(plan):``) at *trace*
+time — ``KernelPolicy(enabled=False)`` (the old REPRO_DISABLE_KERNELS)
+forces the oracle paths everywhere, per-op legs pin one op family, and the
+attention-backward choice (the old mutable ``FORCE_SCAN_ATTN_BWD``) is baked
+into each op call's trace so it scopes correctly under ``use_plan``. Legacy
+env vars are honored only through ``ExecutionPlan.from_env()``
+(repro/exec/envcompat.py), which is what ``current_plan()`` falls back to
+outside any ``use_plan`` scope.
 """
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
 
+from repro.exec.plan import current_plan
 from repro.kernels import ref
 from repro.kernels.fused_elementwise import (
     bias_dropout_add_pallas,
@@ -33,12 +39,6 @@ from repro.kernels.fused_elementwise import (
 )
 from repro.kernels.fused_softmax import fused_softmax_pallas
 from repro.kernels.layer_norm import layer_norm_pallas
-
-KERNELS_ENABLED = os.environ.get("REPRO_DISABLE_KERNELS", "0") != "1"
-
-# Benchmarks flip this to force the jnp KV-scan backward for fused attention
-# even when the Pallas leg is active (backward-kernel A/B).
-FORCE_SCAN_ATTN_BWD = False
 
 # Kernel envelope: last-dim sizes beyond this would blow the VMEM tile budget
 # on the v5e target (ROW_TILE rows * C * 4 B fp32 + headroom in ~16 MB VMEM).
@@ -50,16 +50,40 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _pallas_enabled() -> bool:
-    """Whether ops execute their Pallas kernels. True on TPU (the target);
-    on other backends only when REPRO_PALLAS_INTERPRET=1 (interpret mode, the
-    kernel-validation leg) — otherwise each op's XLA-native leg runs, which
-    is both faster on CPU and safe to lower inside large SPMD dry-runs."""
-    if not KERNELS_ENABLED:
-        return False
+def kernel_leg(op: str) -> str:
+    """Resolved execution leg for an op family under the current plan:
+    'pallas' | 'interpret' | 'xla' | 'oracle'. An explicit per-op leg on
+    KernelPolicy wins; 'auto' resolves to the Pallas kernel on TPU (the
+    target) and to the op's XLA-native leg elsewhere — interpret-mode Pallas
+    (a per-grid-cell loop) only under ``KernelPolicy.interpret`` (the
+    kernel-validation CI leg), which is both faster on CPU and safe to lower
+    inside large SPMD dry-runs. ``enabled=False`` sends every 'auto' op to
+    its jnp oracle."""
+    pol = current_plan().kernels
+    leg = getattr(pol, op)
+    if leg != "auto":
+        return leg
+    if not pol.enabled:
+        return "oracle"
     if jax.default_backend() == "tpu":
-        return True
-    return os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+        return "pallas"
+    return "interpret" if pol.interpret else "xla"
+
+
+def _use_pallas(leg: str) -> bool:
+    """Whether a resolved leg executes the Pallas kernel (off-TPU both
+    'pallas' and 'interpret' run it in interpret mode — there is no compiled
+    Pallas backend to target there). For the element-wise/softmax/LN ops the
+    'xla' leg IS the jnp oracle (XLA fuses it), so this is their whole
+    routing decision."""
+    return leg in ("pallas", "interpret")
+
+
+def _interpret_for(leg: str) -> bool:
+    """Interpret flag for a kernel launch: an explicit 'interpret' leg runs
+    interpret mode even ON TPU (kernel-numerics debugging); everything else
+    interprets only off-TPU, where no compiled Pallas backend exists."""
+    return leg == "interpret" or _interpret()
 
 
 # ---------------------------------------------------------------------------
@@ -69,13 +93,14 @@ def _pallas_enabled() -> bool:
 
 def _softmax_impl(scale, has_bias, has_mask, x, bias, mask):
     n, h, r, c = x.shape
-    if not _pallas_enabled() or c > _MAX_SOFTMAX_C:
+    leg = kernel_leg("softmax")
+    if not _use_pallas(leg) or c > _MAX_SOFTMAX_C:
         return ref.softmax_ref(x, bias if has_bias else None,
                                mask if has_mask else None, scale)
     return fused_softmax_pallas(
         x, bias if has_bias else None, mask if has_mask else None,
         scale=scale, has_bias=has_bias, has_mask=has_mask,
-        interpret=_interpret(),
+        interpret=_interpret_for(leg),
     )
 
 
@@ -134,7 +159,8 @@ def fused_softmax(
     mesh-sharded dims and force GSPMD to all-gather the whole representation
     (§Perf alphafold iter 3).
     """
-    if x.ndim == 5 and not (allow_flatten and _pallas_enabled()
+    if x.ndim == 5 and not (allow_flatten
+                            and _use_pallas(kernel_leg("softmax"))
                             and x.shape[-1] <= _MAX_SOFTMAX_C):
         acc = x.astype(jnp.float32) * scale
         if bias is not None:
@@ -169,24 +195,30 @@ _MAX_ATTN_S = 16384
 _DEFAULT_KV_TILE = 512   # forward KV tile / backward recompute block default
 
 
-def fused_attention_supported(q_shape, kv_len: int | None = None,
-                              dtype=None) -> bool:
-    """True when ops.fused_attention will take the fused flash path (the
-    Pallas kernel on TPU, the XLA-native online-softmax leg elsewhere) for
-    this shape — callers keeping a scores-materialized A/B path (evoformer's
-    ``REPRO_DISABLE_KERNELS`` toggle) branch on this. The same envelope
-    gates the fused Pallas *backward* (``ops._attn_bwd``): forward and
-    backward always agree on which leg owns a shape, so the saved
-    (q, k, v, out, lse) residuals are interchangeable. q_shape is the 4D
-    (N, Sq, H, D) or 5D (B, G, S, H, D) query shape."""
-    if not KERNELS_ENABLED:
-        return False
+def _attn_envelope_ok(q_shape, kv_len: int | None = None, dtype=None) -> bool:
+    """Shape/dtype envelope of the fused attention legs (no plan consult —
+    callers with a baked leg use this directly)."""
     if dtype is not None and jnp.dtype(dtype) not in (
             jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16)):
         return False
     d = q_shape[-1]
     skv = q_shape[-3] if kv_len is None else kv_len
     return d <= _MAX_ATTN_D and skv <= _MAX_ATTN_S
+
+
+def fused_attention_supported(q_shape, kv_len: int | None = None,
+                              dtype=None) -> bool:
+    """True when ops.fused_attention will take a fused flash leg (the Pallas
+    kernel on TPU, the XLA-native online-softmax leg elsewhere) for this
+    shape under the current plan — callers keeping a scores-materialized A/B
+    path (the evoformer's KernelPolicy(enabled=False) leg) branch on this.
+    The same envelope gates the fused Pallas *backward* (``ops._attn_bwd``):
+    forward and backward always agree on which leg owns a shape, so the
+    saved (q, k, v, out, lse) residuals are interchangeable. q_shape is the
+    4D (N, Sq, H, D) or 5D (B, G, S, H, D) query shape."""
+    if kernel_leg("attention") == "oracle":
+        return False
+    return _attn_envelope_ok(q_shape, kv_len=kv_len, dtype=dtype)
 
 
 def _attn_tiles(sq: int, skv: int, d: int, kv_tile: int):
@@ -234,15 +266,19 @@ def _attn_stage_padded(kv_tile, q, k, v, bias, mask):
     return qt, kt, vt, bt, mt, q_tile, kv_t, sq_pad, skv_pad
 
 
-def _attn_fwd_impl(scale, has_bias, has_mask, kv_tile, q, k, v, bias, mask):
-    """Returns (out (N, Sq, H, D), lse (N, H, Sq))."""
+def _attn_fwd_impl(scale, has_bias, has_mask, kv_tile, leg, q, k, v, bias,
+                   mask):
+    """Returns (out (N, Sq, H, D), lse (N, H, Sq)). ``leg`` is the kernel
+    leg resolved (from the plan) when the op was called — baked into the
+    trace so forward, residuals, and backward always agree."""
     n, sq, h, d = q.shape
     skv = k.shape[1]
     bias = bias if has_bias else None
     mask = mask if has_mask else None
-    if not fused_attention_supported(q.shape, kv_len=skv, dtype=q.dtype):
+    if leg == "oracle" or not _attn_envelope_ok(q.shape, kv_len=skv,
+                                               dtype=q.dtype):
         return ref.attention_ref(q, k, v, bias, mask, scale)
-    if not _pallas_enabled():
+    if not _use_pallas(leg):
         # XLA-native online-softmax leg (non-TPU backends): same math, same
         # (out, lse) residuals, lax.scan over KV tiles instead of the kernel
         # grid — interpret-mode Pallas is ~2x this path on CPU smoke shapes.
@@ -258,27 +294,29 @@ def _attn_fwd_impl(scale, has_bias, has_mask, kv_tile, q, k, v, bias, mask):
     out, lse = flash_attention_pallas(
         qt, kt, vt, bt, mt, scale=scale, kv_len=skv, q_tile=q_tile,
         kv_tile=kv_t, has_bias=bias is not None, has_mask=mask is not None,
-        interpret=_interpret(),
+        interpret=_interpret_for(leg),
     )
     return out[:, :, :sq, :d].transpose(0, 2, 1, 3), lse[:, :, :sq]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
-def _attn_op(scale, has_bias, has_mask, kv_tile, q, k, v, bias, mask):
-    out, _ = _attn_fwd_impl(scale, has_bias, has_mask, kv_tile, q, k, v,
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5))
+def _attn_op(scale, has_bias, has_mask, kv_tile, leg, bwd, q, k, v, bias,
+             mask):
+    out, _ = _attn_fwd_impl(scale, has_bias, has_mask, kv_tile, leg, q, k, v,
                             bias, mask)
     return out
 
 
-def _attn_fwd(scale, has_bias, has_mask, kv_tile, q, k, v, bias, mask):
-    out, lse = _attn_fwd_impl(scale, has_bias, has_mask, kv_tile, q, k, v,
-                              bias, mask)
+def _attn_fwd(scale, has_bias, has_mask, kv_tile, leg, bwd, q, k, v, bias,
+              mask):
+    out, lse = _attn_fwd_impl(scale, has_bias, has_mask, kv_tile, leg, q, k,
+                              v, bias, mask)
     # Flash recompute residuals: only (q, k, v, out, lse) + the (already
     # HBM-resident) bias/mask inputs — never the (N, H, Sq, Skv) probs.
     return out, (q, k, v, bias, mask, out, lse)
 
 
-def _attn_bwd_pallas(scale, has_bias, has_mask, kv_tile, res, g):
+def _attn_bwd_pallas(scale, has_bias, has_mask, kv_tile, leg, res, g):
     """Fused Pallas backward: dq/dk/dv (and the bias/mask reductions) are
     computed tile-by-tile in VMEM by flash_attention_bwd_pallas from the
     saved (q, k, v, out, lse) — the fp32 (N, H, Sq, kv_block) recompute
@@ -300,7 +338,7 @@ def _attn_bwd_pallas(scale, has_bias, has_mask, kv_tile, res, g):
     dq, dk, dv, dbias, dmask_h = flash_attention_bwd_pallas(
         qt, kt, vt, dot, lse_p, delta_p, bt, mt, scale=scale, kv_len=skv,
         q_tile=q_tile, kv_tile=kv_t, has_bias=has_bias, has_mask=has_mask,
-        interpret=_interpret(),
+        interpret=_interpret_for(leg),
     )
     dq = dq[:, :, :sq, :d].transpose(0, 2, 1, 3).astype(q.dtype)
     dk = dk[:, :, :skv, :d].transpose(0, 2, 1, 3).astype(k.dtype)
@@ -314,17 +352,21 @@ def _attn_bwd_pallas(scale, has_bias, has_mask, kv_tile, res, g):
     return dq, dk, dv, db, dm
 
 
-def _attn_bwd(scale, has_bias, has_mask, kv_tile, res, g):
+def _attn_bwd(scale, has_bias, has_mask, kv_tile, leg, bwd, res, g):
     """Recompute backward. On the Pallas leg (TPU, or forced interpret) and
     in-envelope shapes: the fused flash_attention_bwd_pallas kernel. Oracle
     leg: scan over KV blocks, rebuilding the probs block from (q, k, lse) —
     peak transient is (N, H, Sq, kv_block), never the full scores tensor
-    (mirrors layers/attention._flash_bwd, plus bias/mask)."""
+    (mirrors layers/attention._flash_bwd, plus bias/mask). ``leg``/``bwd``
+    were resolved from the plan when the op was *called*, so a use_plan
+    scope around the op call governs this backward even though it is traced
+    later (KernelPolicy.attn_bwd='scan' pins the scan for A/B)."""
     q, k, v, bias, mask, out, lse = res
-    if (_pallas_enabled() and not FORCE_SCAN_ATTN_BWD
-            and fused_attention_supported(q.shape, kv_len=k.shape[1],
-                                          dtype=q.dtype)):
-        return _attn_bwd_pallas(scale, has_bias, has_mask, kv_tile, res, g)
+    if (_use_pallas(leg) and bwd != "scan"
+            and _attn_envelope_ok(q.shape, kv_len=k.shape[1],
+                                  dtype=q.dtype)):
+        return _attn_bwd_pallas(scale, has_bias, has_mask, kv_tile, leg,
+                                res, g)
     n, sq, h, d = q.shape
     skv = k.shape[1]
     kvb = min(kv_tile or _DEFAULT_KV_TILE, skv)
@@ -413,11 +455,14 @@ def fused_attention(
     bias/mask reductions tile-by-tile in VMEM (same envelope as the forward:
     D <= 256, Skv <= 16384, fp32/bf16); elsewhere a jnp KV-block scan with a
     (N, H, Sq, kv_block) fp32 transient is the oracle leg
-    (``FORCE_SCAN_ATTN_BWD`` pins it for A/B). Mask values must be finite
-    (~-1e9, not -inf). Out-of-envelope shapes and REPRO_DISABLE_KERNELS=1
-    fall back to the scores-materialized oracle (ref.attention_ref) under
-    the same VJP.
+    (``KernelPolicy.attn_bwd='scan'`` pins it for A/B). Mask values must be
+    finite (~-1e9, not -inf). Out-of-envelope shapes and
+    KernelPolicy(enabled=False) fall back to the scores-materialized oracle
+    (ref.attention_ref) under the same VJP. Leg choices are resolved from
+    ``current_plan()`` here, once, and baked into the trace.
     """
+    leg = kernel_leg("attention")
+    bwd = current_plan().kernels.attn_bwd
     d = q.shape[-1]
     assert k.shape[-1] == d and v.shape[-1] == d, (q.shape, k.shape, v.shape)
     if scale is None:
@@ -430,12 +475,12 @@ def fused_attention(
         vf = v.reshape(b * grp, skv, h, d)
         mb = mask.reshape(b * grp, skv) if mask is not None else None
         out = _attn_op(scale, bias is not None, mask is not None, kv_tile,
-                       qf, kf, vf, bias, mb)
+                       leg, bwd, qf, kf, vf, bias, mb)
         return out.reshape(q.shape)
     if bias is not None and bias.ndim == 3:
         bias = bias[None]
     return _attn_op(scale, bias is not None, mask is not None, kv_tile,
-                    q, k, v, bias, mask)
+                    leg, bwd, q, k, v, bias, mask)
 
 
 # ---------------------------------------------------------------------------
@@ -456,13 +501,6 @@ _DEFAULT_TRI_TILE = 128
 _DEFAULT_OPM_TILE = 128
 
 
-def _triangle_oracle_forced() -> bool:
-    """CI leg: REPRO_FORCE_TRIANGLE_ORACLE=1 pins the triangle/OPM ops to
-    the materialized jnp oracles (ref.py) while the rest of the kernel set
-    stays on its default legs."""
-    return os.environ.get("REPRO_FORCE_TRIANGLE_ORACLE", "0") == "1"
-
-
 def _tri_dtype_ok(dtype) -> bool:
     return jnp.dtype(dtype) in (jnp.dtype(jnp.float32),
                                 jnp.dtype(jnp.bfloat16))
@@ -470,10 +508,12 @@ def _tri_dtype_ok(dtype) -> bool:
 
 def fused_triangle_supported(c: int, d: int, dtype=None) -> bool:
     """True when ops.fused_triangle_mult takes a fused leg (Pallas on TPU /
-    interpret, the XLA j-block scan elsewhere) for this channel size/dtype.
-    Callers keeping the materialized A/B path (the Evoformer's
-    REPRO_DISABLE_KERNELS toggle) branch on this."""
-    if not KERNELS_ENABLED or _triangle_oracle_forced():
+    interpret, the XLA j-block scan elsewhere) for this channel size/dtype
+    under the current plan. Callers keeping the materialized A/B path (the
+    Evoformer's KernelPolicy(enabled=False) leg, or the per-op
+    ``triangle='oracle'`` pin of the ci.sh triangle-oracle preset) branch
+    on this."""
+    if kernel_leg("triangle") == "oracle":
         return False
     if dtype is not None and not _tri_dtype_ok(dtype):
         return False
@@ -482,39 +522,40 @@ def fused_triangle_supported(c: int, d: int, dtype=None) -> bool:
 
 def fused_opm_supported(c: int, d: int, dtype=None) -> bool:
     """Same contract as fused_triangle_supported, for the outer-product-mean
-    (c is the OPM channel — the kernel tile holds c² lanes)."""
-    if not KERNELS_ENABLED or _triangle_oracle_forced():
+    (c is the OPM channel — the kernel tile holds c² lanes); routed by the
+    plan's ``opm`` leg."""
+    if kernel_leg("opm") == "oracle":
         return False
     if dtype is not None and not _tri_dtype_ok(dtype):
         return False
     return c <= _MAX_OPM_C and d <= _MAX_TRI_C
 
 
-def _tri_fwd_impl(eps, tile, a_lin, ga, mask, b_full, gamma, beta, w_out,
-                  b_out, g_lin, g_bias):
+def _tri_fwd_impl(eps, tile, leg, a_lin, ga, mask, b_full, gamma, beta,
+                  w_out, b_out, g_lin, g_bias):
     from repro.kernels import triangle as tri
 
-    if _pallas_enabled():
+    if _use_pallas(leg):
         return tri.fused_triangle_pallas(
             a_lin, ga, mask, b_full, gamma, beta, w_out, b_out, g_lin,
-            g_bias, eps=eps, k_tile=tile, interpret=_interpret())
+            g_bias, eps=eps, k_tile=tile, interpret=_interpret_for(leg))
     a = tri.triangle_gate_a(a_lin, ga, mask)
     return tri.fused_triangle_xla(
         a, b_full, g_lin, gamma, beta, w_out, b_out, g_bias, eps=eps,
         j_block=tile or _DEFAULT_TRI_TILE)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _tri_op(eps, tile, a_lin, ga, mask, b_full, gamma, beta, w_out, b_out,
-            g_lin, g_bias):
-    out, _, _ = _tri_fwd_impl(eps, tile, a_lin, ga, mask, b_full, gamma,
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _tri_op(eps, tile, leg, a_lin, ga, mask, b_full, gamma, beta, w_out,
+            b_out, g_lin, g_bias):
+    out, _, _ = _tri_fwd_impl(eps, tile, leg, a_lin, ga, mask, b_full, gamma,
                               beta, w_out, b_out, g_lin, g_bias)
     return out
 
 
-def _tri_fwd(eps, tile, a_lin, ga, mask, b_full, gamma, beta, w_out, b_out,
-             g_lin, g_bias):
-    out, mean, inv = _tri_fwd_impl(eps, tile, a_lin, ga, mask, b_full,
+def _tri_fwd(eps, tile, leg, a_lin, ga, mask, b_full, gamma, beta, w_out,
+             b_out, g_lin, g_bias):
+    out, mean, inv = _tri_fwd_impl(eps, tile, leg, a_lin, ga, mask, b_full,
                                    gamma, beta, w_out, b_out, g_lin, g_bias)
     # Recompute residuals: inputs + per-tile LN stats + the (already
     # HBM-resident) output — never the (B, I, J, C) product. `out` gives the
@@ -523,7 +564,7 @@ def _tri_fwd(eps, tile, a_lin, ga, mask, b_full, gamma, beta, w_out, b_out,
                  g_bias, mean, inv, out)
 
 
-def _tri_bwd(eps, tile, res, g):
+def _tri_bwd(eps, tile, leg, res, g):
     from repro.kernels.triangle import triangle_mult_bwd
 
     return triangle_mult_bwd(eps, tile or _DEFAULT_TRI_TILE, res, g)
@@ -563,41 +604,42 @@ def fused_triangle_mult(
 
     custom_vjp: forward saves inputs + per-tile (mean, inv) LN stats; the
     backward rebuilds the product per j block (kernels/triangle.py).
-    Out-of-envelope dtypes/channels, REPRO_DISABLE_KERNELS=1, and
-    REPRO_FORCE_TRIANGLE_ORACLE=1 fall back to ref.triangle_mult_ref.
+    Out-of-envelope dtypes/channels, KernelPolicy(enabled=False), and the
+    per-op ``triangle='oracle'`` leg fall back to ref.triangle_mult_ref.
     """
     if not fused_triangle_supported(a_lin.shape[-1], w_out.shape[-1],
                                     a_lin.dtype):
         return ref.triangle_mult_ref(a_lin, ga, mask, b_full, gamma, beta,
                                      w_out, b_out, g_lin, g_bias, eps)
-    return _tri_op(eps, tile, a_lin, ga, mask, b_full, gamma, beta, w_out,
-                   b_out, g_lin, g_bias)
+    return _tri_op(eps, tile, kernel_leg("triangle"), a_lin, ga, mask,
+                   b_full, gamma, beta, w_out, b_out, g_lin, g_bias)
 
 
-def _opm_fwd_impl(tile, a, b_full, mask_a, mask_b, w, bias):
+def _opm_fwd_impl(tile, leg, a, b_full, mask_a, mask_b, w, bias):
     from repro.kernels import triangle as tri
 
-    if _pallas_enabled():
+    if _use_pallas(leg):
         return tri.fused_opm_pallas(a, b_full, mask_a, mask_b, w, bias,
-                                    s_tile=tile, interpret=_interpret())
+                                    s_tile=tile,
+                                    interpret=_interpret_for(leg))
     return tri.fused_opm_xla(a, b_full, mask_a, mask_b, w, bias,
                              j_block=tile or _DEFAULT_OPM_TILE)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _opm_op(tile, a, b_full, mask_a, mask_b, w, bias):
-    return _opm_fwd_impl(tile, a, b_full, mask_a, mask_b, w, bias)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _opm_op(tile, leg, a, b_full, mask_a, mask_b, w, bias):
+    return _opm_fwd_impl(tile, leg, a, b_full, mask_a, mask_b, w, bias)
 
 
-def _opm_fwd(tile, a, b_full, mask_a, mask_b, w, bias):
-    out = _opm_fwd_impl(tile, a, b_full, mask_a, mask_b, w, bias)
+def _opm_fwd(tile, leg, a, b_full, mask_a, mask_b, w, bias):
+    out = _opm_fwd_impl(tile, leg, a, b_full, mask_a, mask_b, w, bias)
     # Residuals: inputs + the (already HBM-resident) output — `out` turns
     # the mask-norm cotangent into a cheap (B, I, J, D) contraction instead
     # of a full ov·(g@wᵀ) reduction over c² (see opm_bwd).
     return out, (a, b_full, mask_a, mask_b, w, bias, out)
 
 
-def _opm_bwd(tile, res, g):
+def _opm_bwd(tile, leg, res, g):
     from repro.kernels.triangle import opm_bwd
 
     return opm_bwd(tile or _DEFAULT_OPM_TILE, res, g)
@@ -634,7 +676,8 @@ def fused_outer_product_mean(
     """
     if not fused_opm_supported(a.shape[-1], w.shape[-1], a.dtype):
         return ref.outer_product_mean_ref(a, b_full, mask_a, mask_b, w, bias)
-    return _opm_op(tile, a, b_full, mask_a, mask_b, w, bias)
+    return _opm_op(tile, kernel_leg("opm"), a, b_full, mask_a, mask_b, w,
+                   bias)
 
 
 # ---------------------------------------------------------------------------
@@ -645,7 +688,8 @@ def fused_outer_product_mean(
 def _ln_impl(eps, x, gamma, beta):
     # The public layer_norm wrapper routes the oracle leg (Pallas inactive /
     # over-envelope C) before flattening; only the kernel leg reaches here.
-    return layer_norm_pallas(x, gamma, beta, eps=eps, interpret=_interpret())
+    return layer_norm_pallas(x, gamma, beta, eps=eps,
+                             interpret=_interpret_for(kernel_leg("layer_norm")))
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -689,7 +733,7 @@ def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
     stay unmerged under GSPMD — same contract as the oracle leg. Only 1D /
     5D+ shapes (outside the Evoformer layouts) reshape."""
     c = x.shape[-1]
-    if not _pallas_enabled() or c > _MAX_NORM_C:
+    if not _use_pallas(kernel_leg("layer_norm")) or c > _MAX_NORM_C:
         # Oracle path without flattening (see bias_sigmoid_mul): keeps
         # mesh-sharded leading dims unmerged under GSPMD.
         return ref.layer_norm_ref(x, gamma, beta, eps)
@@ -707,7 +751,8 @@ def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
 def _bsm_impl(g, bg, v):
     # The public bias_sigmoid_mul wrapper routes the oracle leg before
     # flattening; only the kernel leg reaches here.
-    return bias_sigmoid_mul_pallas(g, bg, v, interpret=_interpret())
+    return bias_sigmoid_mul_pallas(
+        g, bg, v, interpret=_interpret_for(kernel_leg("elementwise")))
 
 
 @jax.custom_vjp
@@ -740,7 +785,7 @@ def bias_sigmoid_mul(g: jax.Array, bg: jax.Array, v: jax.Array) -> jax.Array:
     dims): no row-flatten, so mesh-sharded leading dims stay unmerged under
     GSPMD — matching the oracle leg."""
     c = g.shape[-1]
-    if not _pallas_enabled() or c > _MAX_NORM_C:
+    if not _use_pallas(kernel_leg("elementwise")) or c > _MAX_NORM_C:
         # Oracle path without flattening: reshaping (B, G, ...) to rows would
         # merge mesh-sharded dims under GSPMD and force a resharding copy of
         # the whole tensor (same note as fused_softmax 5D / bias_dropout_add).
@@ -758,11 +803,12 @@ def bias_sigmoid_mul(g: jax.Array, bg: jax.Array, v: jax.Array) -> jax.Array:
 
 def _bda_impl(rate, x, b, residual, keep):
     c = x.shape[-1]
-    if not _pallas_enabled() or c > _MAX_NORM_C:
+    leg = kernel_leg("elementwise")
+    if not _use_pallas(leg) or c > _MAX_NORM_C:
         return ref.bias_dropout_add_ref(x, b, residual,
                                         keep if rate > 0.0 else None, rate)
     return bias_dropout_add_pallas(x, b, residual, keep, rate=rate,
-                                   interpret=_interpret())
+                                   interpret=_interpret_for(leg))
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -826,7 +872,7 @@ def bias_dropout_add(
         eff_rate = rate
     if b is None:
         b = jnp.zeros((c,), x.dtype)
-    if not _pallas_enabled() or c > _MAX_NORM_C:
+    if not _use_pallas(kernel_leg("elementwise")) or c > _MAX_NORM_C:
         # Oracle path without flattening: reshaping (B, G, ...) to rows would
         # merge mesh-sharded dims under GSPMD (same note as fused_softmax 5D).
         return ref.bias_dropout_add_ref(x, b, residual, keep_full, eff_rate)

@@ -35,9 +35,10 @@ Three legs per op (selected by ``ops.fused_triangle_mult`` /
   ``(B, I, j_block, C²)`` (OPM) instead of the full ``(B, I, J, ·)``.
 
 * **jnp oracle** (``ref.triangle_mult_ref`` / ``ref.outer_product_mean_ref``)
-  — the materialized baseline used for parity tests, for
-  ``REPRO_DISABLE_KERNELS=1`` / ``REPRO_FORCE_TRIANGLE_ORACLE=1`` A/B runs,
-  and for out-of-envelope dtypes.
+  — the materialized baseline used for parity tests, for the plan's oracle
+  legs (``KernelPolicy(enabled=False)`` / ``triangle='oracle'`` /
+  ``opm='oracle'`` — the old env toggles, see repro/exec/envcompat.py), and
+  for out-of-envelope dtypes.
 
 Backward: a recompute ``custom_vjp`` (defined in ops.py over
 ``triangle_mult_bwd`` / ``opm_bwd`` below) saves only the inputs plus the

@@ -1,9 +1,9 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.exec import envcompat
+envcompat.force_host_device_count(512)  # before jax import: no backend yet
 # Kernels stay ENABLED: on a non-TPU backend every op lowers its XLA-native
-# leg (ops._pallas_enabled) — interpret-mode Pallas (a per-grid-cell loop,
-# catastrophic inside a 512-device SPMD program) never runs unless
-# REPRO_PALLAS_INTERPRET=1. In particular the Evoformer attention sites lower
+# leg (ops.kernel_leg) — interpret-mode Pallas (a per-grid-cell loop,
+# catastrophic inside a 512-device SPMD program) never runs unless the plan
+# asks for interpret mode. In particular the Evoformer attention sites lower
 # the shard_map-wrapped fused-attention path (GspmdDist.sharded_attention),
 # i.e. the dry-run proves the production DAP x fused-kernel composition —
 # no oracle fallback, no merged-(B, G) all-gather.

@@ -12,6 +12,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, list_archs
+from repro.exec.plan import PRESETS, preset
 from repro.models.decoder import init_model
 from repro.serving.engine import ServingEngine
 
@@ -25,12 +26,14 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--plan", default="default", choices=sorted(PRESETS),
+                    help="ExecutionPlan preset the engine binds")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced_variant=args.reduced)
     params = init_model(jax.random.PRNGKey(0), cfg)
     engine = ServingEngine(params, cfg, n_slots=args.slots,
-                           max_seq=args.max_seq)
+                           max_seq=args.max_seq, plan=preset(args.plan))
     rng = np.random.default_rng(0)
     t0 = time.time()
     for _ in range(args.requests):

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, list_archs
 from repro.data import lm_batches
+from repro.exec.plan import PRESETS, preset, use_plan
 from repro.layers.params import count_params
 from repro.models.decoder import init_model, lm_loss
 from repro.train.checkpoint import save_checkpoint
@@ -35,8 +36,15 @@ def main():
     ap.add_argument("--optimizer", default="adamw", choices=["adamw", "lamb"])
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--plan", default="default", choices=sorted(PRESETS),
+                    help="ExecutionPlan preset the run executes under")
     args = ap.parse_args()
 
+    with use_plan(preset(args.plan)):
+        _run(args)
+
+
+def _run(args):
     cfg = get_config(args.arch, reduced_variant=args.reduced)
     params = init_model(jax.random.PRNGKey(0), cfg)
     print(f"{args.arch} ({'reduced' if args.reduced else 'full'}): "

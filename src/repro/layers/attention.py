@@ -9,7 +9,8 @@ Execution strategies, chosen by the caller:
 * ``evoformer_attention`` — scores-materialized gated attention with the
   paper's fused scale+bias+mask+softmax Pallas kernel. Evoformer rows are
   short (N_r <= a few k), which is the regime the paper's kernel targets;
-  kept as the A/B baseline (REPRO_DISABLE_KERNELS=1) and the TP path.
+  kept as the A/B baseline (KernelPolicy(enabled=False), the "oracle"
+  plan preset) and the TP path.
 * ``blockwise_attention`` — flash-style online-softmax attention (lax.scan
   over q/kv blocks, fp32 running max/sum). Used for decoder-LM training and
   32k prefill, where scores cannot be materialized.

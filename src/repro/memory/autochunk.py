@@ -352,13 +352,19 @@ def resolve_evoformer_config(
     n_seq: int,
     n_res: int,
     dap: int = 1,
-    budget_bytes: int = HBM_BYTES,
+    budget_bytes: int | None = None,
 ):
     """AutoChunk entry point used by ``alphafold_forward``: returns cfg with
     every knob left at 0 replaced by the planned value (no-op when
-    ``cfg.auto_chunk`` is False or everything already fits unchunked)."""
+    ``cfg.auto_chunk`` is False or everything already fits unchunked).
+    ``budget_bytes=None`` resolves the current ExecutionPlan's
+    MemoryPolicy.hbm_budget, falling back to the hardware HBM_BYTES."""
     if not getattr(cfg, "auto_chunk", False):
         return cfg
+    if budget_bytes is None:
+        from repro.exec.plan import current_plan
+
+        budget_bytes = current_plan().memory.hbm_budget or HBM_BYTES
     from repro.kernels import ops
 
     fused = ops.fused_attention_supported(

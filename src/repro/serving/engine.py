@@ -13,6 +13,17 @@ Memory: the engine's attention blocks come from the AutoChunk planner
 ``attn_q_block``/``attn_kv_block`` are kept when the KV cache + prefill
 transients fit the HBM budget and shrunk (KV block first) when they don't.
 ``auto_plan=False`` restores the raw config.
+
+Execution policy: the engine binds one ExecutionPlan (default: the ambient
+``current_plan()``), and ``submit(..., plan=...)`` overrides it per request —
+e.g. oracle-leg canary requests beside production pallas-leg requests in the
+same engine, with no process-global toggles. Each request's prefill runs
+under its own plan; decode steps group the active slots by plan and run one
+batched decode per distinct plan (each with its own jit wrapper, so plans
+never share a trace), committing only that group's cache rows — slots are
+independent in a decode step, so discarding the other rows is exact. The
+engine's HBM budget for the block planner defaults to the bound plan's
+MemoryPolicy.
 """
 from __future__ import annotations
 
@@ -24,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.exec.plan import ExecutionPlan, current_plan, use_plan
 from repro.launch.mesh import HBM_BYTES
 from repro.memory.autochunk import plan_decoder_blocks
 from repro.models.decoder import init_cache, model_forward
@@ -36,6 +48,8 @@ class Request:
     max_new_tokens: int = 32
     temperature: float = 0.0               # 0 => greedy
     eos_id: Optional[int] = None
+    # execution plan this request runs under (engine default when None)
+    plan: Optional[ExecutionPlan] = None
     # outputs
     generated: list = field(default_factory=list)
     done: bool = False
@@ -50,14 +64,18 @@ def sample_token(logits, rng, temperature: float):
 class ServingEngine:
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
                  max_seq: int = 512, dtype=jnp.bfloat16,
-                 auto_plan: bool = True, hbm_budget: int = HBM_BYTES):
+                 auto_plan: bool = True, hbm_budget: int | None = None,
+                 plan: ExecutionPlan | None = None):
         self.params = params
+        self.plan = plan if plan is not None else current_plan()
+        if hbm_budget is None:
+            hbm_budget = self.plan.memory.hbm_budget or HBM_BYTES
         if auto_plan:
-            cfg, self.plan = plan_decoder_blocks(
+            cfg, self.block_plan = plan_decoder_blocks(
                 cfg, n_slots=n_slots, max_seq=max_seq,
                 budget_bytes=hbm_budget)
         else:
-            self.plan = None
+            self.block_plan = None
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_seq = max_seq
@@ -68,14 +86,27 @@ class ServingEngine:
         self.finished: list[Request] = []
         self._rng = jax.random.PRNGKey(0)
         self._next_uid = 0
+        # One jitted decode per distinct ExecutionPlan seen in traffic (the
+        # plan steers trace-time branches — wrappers must not be shared).
+        self._decode_fns: dict[ExecutionPlan, Callable] = {}
 
-        self._decode = jax.jit(
-            lambda params, toks, cache, lengths: model_forward(
-                params, toks, cfg, mode="decode", cache=cache,
-                lengths=lengths)
-        )
+    def _decode_for(self, plan: ExecutionPlan):
+        fn = self._decode_fns.get(plan)
+        if fn is None:
+            def decode(params, toks, cache, lengths):
+                with use_plan(plan):
+                    return model_forward(params, toks, self.cfg,
+                                         mode="decode", cache=cache,
+                                         lengths=lengths)
 
-    def submit(self, prompt: np.ndarray, **kw) -> Request:
+            fn = jax.jit(decode)
+            self._decode_fns[plan] = fn
+        return fn
+
+    def submit(self, prompt: np.ndarray, *,
+               plan: ExecutionPlan | None = None, **kw) -> Request:
+        """Queue a request. ``plan`` overrides the engine's bound
+        ExecutionPlan for this request only (prefill + its decode group)."""
         prompt = np.asarray(prompt, np.int32)
         if prompt.shape[-1] > self.max_seq:
             # Admitting an over-length prompt would prefill past the cache
@@ -85,7 +116,8 @@ class ServingEngine:
             raise ValueError(
                 f"prompt length {prompt.shape[-1]} exceeds the engine's "
                 f"max_seq={self.max_seq}")
-        req = Request(uid=self._next_uid, prompt=prompt, **kw)
+        req = Request(uid=self._next_uid, prompt=prompt,
+                      plan=plan if plan is not None else self.plan, **kw)
         self._next_uid += 1
         self.pending.append(req)
         return req
@@ -98,9 +130,10 @@ class ServingEngine:
                 continue
             req = self.pending.pop(0)
             prompt = jnp.asarray(req.prompt)[None]            # (1, S)
-            out = model_forward(
-                self.params, prompt, self.cfg, mode="prefill",
-                max_cache_len=self.max_seq)
+            with use_plan(req.plan):
+                out = model_forward(
+                    self.params, prompt, self.cfg, mode="prefill",
+                    max_cache_len=self.max_seq)
             # scatter the single-row cache into this slot
             self.cache = jax.tree.map(
                 lambda full, one: full.at[:, slot].set(one[:, 0]),
@@ -137,7 +170,9 @@ class ServingEngine:
                 self._release(slot, req)
 
     def step(self):
-        """One batched decode step across all active slots."""
+        """One batched decode step across all active slots — one decode call
+        per distinct request plan (slots in a decode step are independent, so
+        each plan group commits only its own cache rows and logits)."""
         self._admit()
         self._retire_full()
         active = [s for s, r in enumerate(self.slot_req) if r is not None]
@@ -146,17 +181,35 @@ class ServingEngine:
         toks = np.zeros((self.n_slots, 1), np.int32)
         for s in active:
             toks[s, 0] = self.slot_req[s].generated[-1]
-        out = self._decode(self.params, jnp.asarray(toks), self.cache,
-                           self.lengths)
-        self.cache = out["cache"]
+        toks = jnp.asarray(toks)
+
+        groups: dict[ExecutionPlan, list[int]] = {}
+        for s in active:
+            groups.setdefault(self.slot_req[s].plan, []).append(s)
+
+        new_cache = self.cache
+        logits_by_slot: dict[int, jax.Array] = {}
+        for plan_, slots in groups.items():
+            out = self._decode_for(plan_)(self.params, toks, self.cache,
+                                          self.lengths)
+            if len(groups) == 1:
+                new_cache = out["cache"]
+            else:
+                idx = jnp.asarray(slots)
+                new_cache = jax.tree.map(
+                    lambda acc, new: acc.at[:, idx].set(new[:, idx]),
+                    new_cache, out["cache"])
+            logits = out["logits"][:, 0]
+            for s in slots:
+                logits_by_slot[s] = logits[s]
+        self.cache = new_cache
         self.lengths = self.lengths + jnp.asarray(
             [1 if self.slot_req[s] is not None else 0
              for s in range(self.n_slots)], jnp.int32)
-        logits = out["logits"][:, 0]
         for s in active:
             req = self.slot_req[s]
             if req is not None:
-                self._emit(s, logits[s], req)
+                self._emit(s, logits_by_slot[s], req)
         return True
 
     def run(self):

@@ -131,6 +131,7 @@ from repro.core.dist import GspmdDist, LocalDist
 from repro.core.evoformer import EvoformerConfig, init_evoformer_stack, \
     evoformer_stack
 from repro.kernels import ops
+from repro.exec.plan import current_plan
 from repro.launch.mesh import _mesh
 
 cfg = EvoformerConfig(d_msa=32, d_pair=16, msa_heads=4, pair_heads=2,
@@ -188,7 +189,7 @@ with (jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh):
     check_grads(g, "gspmd grad")
     hlo = fwd.lower(params).compile().as_text()
 
-if ops.KERNELS_ENABLED:
+if current_plan().kernels.enabled:
     # all four attention sites took the shard-mapped fused path (the scan
     # body is traced once regardless of n_blocks)
     assert calls[0] >= 4 and calls[0] % 4 == 0, calls
@@ -215,6 +216,7 @@ from repro.core.dist import (GspmdDist, LocalDist, ShardMapDist,
 from repro.core.evoformer import EvoformerConfig, init_evoformer_stack, \
     evoformer_stack
 from repro.kernels import ops
+from repro.exec.plan import current_plan
 from repro.launch.mesh import _mesh
 
 n_dev = len(jax.devices())
@@ -329,7 +331,7 @@ with (jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh):
     m, z = jax.jit(lambda p: evoformer_stack(
         p, msa, pair, *masks, dist=dist2, cfg=cfg, remat=False))(params)
 close(m, m_ref, "evo msa"); close(z, z_ref, "evo pair")
-if ops.KERNELS_ENABLED:
+if current_plan().kernels.enabled:
     # 2 triangle sites + 1 OPM site per block (scan body traced once)
     assert calls["tri"] >= 2 and calls["tri"] % 2 == 0, calls
     assert calls["opm"] >= 1, calls

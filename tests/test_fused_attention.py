@@ -14,6 +14,7 @@ from repro.core.evoformer import (
     evoformer_block,
     init_evoformer_block,
 )
+from repro.exec.plan import current_plan, preset, use_plan
 from repro.kernels import ops, ref
 
 ATOL = {jnp.float32: 1e-5, jnp.bfloat16: 2e-2}
@@ -190,12 +191,11 @@ def test_fused_pallas_backward_matches_scan_bf16(monkeypatch):
             ** 2)
 
     g_pallas = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
-    old = ops.FORCE_SCAN_ATTN_BWD
-    try:
-        ops.FORCE_SCAN_ATTN_BWD = True
+    # Pin the scan backward via a plan scope (the old FORCE_SCAN_ATTN_BWD
+    # module global): the leg bakes into the op call's trace, so scoping the
+    # grad call is sufficient and nothing leaks to other tests.
+    with use_plan(current_plan().with_kernels(attn_bwd="scan")):
         g_scan = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
-    finally:
-        ops.FORCE_SCAN_ATTN_BWD = old
     for a, b in zip(g_pallas, g_scan):
         a = np.asarray(a, np.float32)
         b = np.asarray(b, np.float32)
@@ -204,15 +204,12 @@ def test_fused_pallas_backward_matches_scan_bf16(monkeypatch):
 
 
 def test_fused_attention_disabled_matches_kernel():
-    """REPRO_DISABLE_KERNELS oracle fallback == Pallas path (A/B toggle)."""
+    """The 'oracle' plan's fallback == the kernel path (A/B as a use_plan
+    scope instead of the old KERNELS_ENABLED mutation)."""
     q, k, v, bias, mask = _mk(2, 16, 16, 2, 8, jnp.float32, True, True)
     y_kern = ops.fused_attention(q, k, v, bias=bias, mask=mask)
-    old = ops.KERNELS_ENABLED
-    try:
-        ops.KERNELS_ENABLED = False
+    with use_plan(preset("oracle")):
         y_ref = ops.fused_attention(q, k, v, bias=bias, mask=mask)
-    finally:
-        ops.KERNELS_ENABLED = old
     np.testing.assert_allclose(np.asarray(y_kern), np.asarray(y_ref),
                                atol=1e-6)
 
@@ -248,12 +245,8 @@ def test_evoformer_block_grad_parity_fused_vs_oracle(block_inputs):
     evoformer_block (fp32: 1e-5)."""
     params = init_evoformer_block(jax.random.PRNGKey(0), CFG)
     g_fused = _block_grads(params, block_inputs, CFG, LocalDist())
-    old = ops.KERNELS_ENABLED
-    try:
-        ops.KERNELS_ENABLED = False
+    with use_plan(preset("oracle")):
         g_ref = _block_grads(params, block_inputs, CFG, LocalDist())
-    finally:
-        ops.KERNELS_ENABLED = old
     flat1, tree1 = jax.tree.flatten(g_fused)
     flat2, tree2 = jax.tree.flatten(g_ref)
     assert tree1 == tree2
@@ -290,12 +283,8 @@ def test_evoformer_block_bf16_grad_parity(block_inputs):
     inputs = tuple(x.astype(jnp.bfloat16) if x.ndim == 4 else x
                    for x in block_inputs)
     g_fused = _block_grads(params, inputs, cfg, LocalDist())
-    old = ops.KERNELS_ENABLED
-    try:
-        ops.KERNELS_ENABLED = False
+    with use_plan(preset("oracle")):
         g_ref = _block_grads(params, inputs, cfg, LocalDist())
-    finally:
-        ops.KERNELS_ENABLED = old
     for a, b in zip(jax.tree.leaves(g_fused), jax.tree.leaves(g_ref)):
         a = np.asarray(a, np.float32)
         b = np.asarray(b, np.float32)

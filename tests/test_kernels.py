@@ -203,16 +203,13 @@ def test_bias_dropout_add_rate():
 
 
 def test_kernels_disable_flag():
+    from repro.exec.plan import preset, use_plan
     from repro.kernels import ops as ops_mod
     x = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
     g = jnp.ones((64,))
     b = jnp.zeros((64,))
-    old = ops_mod.KERNELS_ENABLED
-    try:
-        ops_mod.KERNELS_ENABLED = False
+    with use_plan(preset("oracle")):
         y_ref = ops_mod.layer_norm(x, g, b)
-    finally:
-        ops_mod.KERNELS_ENABLED = old
     y_kern = ops_mod.layer_norm(x, g, b)
     np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_kern),
                                atol=1e-6)

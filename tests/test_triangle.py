@@ -17,6 +17,7 @@ from repro.core.evoformer import (
     triangle_mult_incoming,
     triangle_mult_outgoing,
 )
+from repro.exec.plan import preset, use_plan
 from repro.kernels import ops, ref
 
 ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
@@ -229,12 +230,8 @@ def test_triangle_oracle_forced_env(monkeypatch):
 def test_kernels_disabled_falls_back_to_oracle():
     args = _tri_inputs(jnp.float32, "sparse")
     y_kern = ops.fused_triangle_mult(*args)
-    old = ops.KERNELS_ENABLED
-    try:
-        ops.KERNELS_ENABLED = False
+    with use_plan(preset("oracle")):
         y_ref = ops.fused_triangle_mult(*args)
-    finally:
-        ops.KERNELS_ENABLED = old
     np.testing.assert_allclose(np.asarray(y_kern), np.asarray(y_ref),
                                atol=2e-5)
 
@@ -278,12 +275,8 @@ def test_evoformer_pair_sites_fused_vs_materialized(site):
         return outer_product_mean(params["opm"], msa, msa_mask, dist, CFG)
 
     got = run()
-    old = ops.KERNELS_ENABLED
-    try:
-        ops.KERNELS_ENABLED = False
+    with use_plan(preset("oracle")):
         want = run()
-    finally:
-        ops.KERNELS_ENABLED = old
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
                                rtol=1e-4)
 
@@ -305,12 +298,8 @@ def test_evoformer_pair_sites_grad_parity():
         return jnp.sum((z + u2) ** 2)
 
     g_fused = jax.grad(loss, argnums=(0, 1))(params, pair)
-    old = ops.KERNELS_ENABLED
-    try:
-        ops.KERNELS_ENABLED = False
+    with use_plan(preset("oracle")):
         g_ref = jax.grad(loss, argnums=(0, 1))(params, pair)
-    finally:
-        ops.KERNELS_ENABLED = old
     for a, b in zip(jax.tree.leaves(g_fused), jax.tree.leaves(g_ref)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5,
                                    rtol=1e-3)
