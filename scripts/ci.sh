@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Tier-1 CI, five legs — each leg is a named ExecutionPlan preset selected
+# Tier-1 CI, six legs — each leg is a named ExecutionPlan preset selected
 # through the single REPRO_PLAN entry point (resolved by the one env-compat
 # module, src/repro/exec/envcompat.py -> repro.exec.plan.PRESETS):
 #   1. default          — KernelPolicy(enabled=True): Pallas kernels on TPU;
@@ -21,41 +21,54 @@
 #   5. multi-device     — 8 host devices: distributed DAP/GSPMD parity, the
 #                         shard-mapped fused attention + triangle/OPM, and
 #                         the fused attention suite, on both kernel legs.
+#   6. resilience       — the fault-injection/chaos suite + the serving
+#                         suite on BOTH kernel legs, with the process-wide
+#                         fault schedule pinned via REPRO_FAULT_SEED
+#                         (resolved by envcompat.fault_seed) so the
+#                         randomized sweeps are reproducible in CI.
 # Any divergence between a kernel and its oracle fails fast in legs 1/3;
 # legs 2/4 prove the fallback paths stay healthy on their own.
-# A final grep gate asserts os.environ access stays confined to the compat
-# module (tests/test_exec_plan.py enforces the same in-suite).
+# Final grep gates assert (a) os.environ access stays confined to the
+# compat module (tests/test_exec_plan.py enforces the same in-suite), and
+# (b) no bare "except Exception:" outside src/repro/resilience/ — failure
+# handling must dispatch on the typed fault hierarchy, not swallow.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "=== tier-1 leg 1/5: plan preset 'default' (XLA-native legs off-TPU) ==="
+echo "=== tier-1 leg 1/6: plan preset 'default' (XLA-native legs off-TPU) ==="
 python -m pytest -x -q "$@"
 
-echo "=== tier-1 leg 2/5: plan preset 'oracle' (REPRO_PLAN=oracle, jnp paths) ==="
+echo "=== tier-1 leg 2/6: plan preset 'oracle' (REPRO_PLAN=oracle, jnp paths) ==="
 REPRO_PLAN=oracle python -m pytest -x -q "$@"
 
 if [ "$#" -gt 0 ]; then
-    # Scoped developer run: legs 3-5 run fixed module lists that would ignore
+    # Scoped developer run: legs 3-6 run fixed module lists that would ignore
     # the selection — stop here rather than silently dropping the arguments.
     echo "ci.sh: args given — scoped run, legs 1-2 only"
     exit 0
 fi
 
-echo "=== tier-1 leg 3/5: plan preset 'interpret' (Pallas interpret validation) ==="
+echo "=== tier-1 leg 3/6: plan preset 'interpret' (Pallas interpret validation) ==="
 REPRO_PLAN=interpret python -m pytest -x -q \
     tests/test_kernels.py tests/test_fused_attention.py tests/test_triangle.py
 
-echo "=== tier-1 leg 4/5: plan preset 'triangle-oracle' (pair-stack kernels -> oracles) ==="
+echo "=== tier-1 leg 4/6: plan preset 'triangle-oracle' (pair-stack kernels -> oracles) ==="
 REPRO_PLAN=triangle-oracle python -m pytest -x -q \
     tests/test_triangle.py tests/test_evoformer.py tests/test_fused_attention.py \
     tests/test_autochunk.py tests/test_alphafold.py
 
-echo "=== tier-1 leg 5/5: multi-device (8 host devices), both kernel legs ==="
+echo "=== tier-1 leg 5/6: multi-device (8 host devices), both kernel legs ==="
 XLA_FLAGS="--xla_force_host_platform_device_count=8" python -m pytest -x -q \
     tests/test_distributed.py tests/test_fused_attention.py tests/test_triangle.py
 XLA_FLAGS="--xla_force_host_platform_device_count=8" REPRO_PLAN=oracle \
     python -m pytest -x -q tests/test_distributed.py
+
+echo "=== tier-1 leg 6/6: resilience (fault injection + chaos), both kernel legs ==="
+REPRO_FAULT_SEED=1234 python -m pytest -x -q \
+    tests/test_resilience.py tests/test_serving.py
+REPRO_FAULT_SEED=1234 REPRO_PLAN=oracle python -m pytest -x -q \
+    tests/test_resilience.py tests/test_serving.py
 
 echo "=== grep gate: os.environ confined to src/repro/exec/envcompat.py ==="
 stray=$(grep -rn "os\.environ" src/repro --include="*.py" \
@@ -63,6 +76,18 @@ stray=$(grep -rn "os\.environ" src/repro --include="*.py" \
 if [ -n "$stray" ]; then
     echo "$stray"
     echo "ci.sh: FAIL — os.environ access outside the env-compat module"
+    exit 1
+fi
+
+echo "=== grep gate: no bare 'except Exception:' outside src/repro/resilience/ ==="
+# "except Exception as err:" with typed re-dispatch is fine; a bare handler
+# that can swallow anything is not — failures must stay typed so the
+# engine's retry/degradation routing (and tests) can see them.
+stray=$(grep -rnE "except Exception *:" src/repro --include="*.py" \
+        | grep -v "repro/resilience/" || true)
+if [ -n "$stray" ]; then
+    echo "$stray"
+    echo "ci.sh: FAIL — bare 'except Exception:' outside repro/resilience/"
     exit 1
 fi
 

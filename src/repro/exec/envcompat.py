@@ -16,6 +16,8 @@ Recognized variables:
   REPRO_PALLAS_INTERPRET=1         -> KernelPolicy.interpret = True
   REPRO_FORCE_TRIANGLE_ORACLE=1    -> KernelPolicy.triangle = opm = "oracle"
   REPRO_FORCE_SCAN_ATTN_BWD=1      -> KernelPolicy.attn_bwd = "scan"
+  REPRO_FAULT_SEED=<int>           -> default seed of resilience.FaultInjector
+                                   (not a plan field; read via fault_seed())
 
 Legacy flags layer on top of the preset, so e.g.
 ``REPRO_PLAN=interpret REPRO_FORCE_TRIANGLE_ORACLE=1`` composes.
@@ -65,6 +67,14 @@ def plan_from_env():
         p = p.replace(kernels=kern)
     _cache[key] = p
     return p
+
+
+def fault_seed() -> int | None:
+    """Default FaultInjector seed from REPRO_FAULT_SEED (None when unset) —
+    the resilience CI leg pins a process-wide fault schedule through here,
+    keeping os.environ access confined to this module."""
+    v = os.environ.get("REPRO_FAULT_SEED")
+    return int(v) if v else None
 
 
 def force_host_device_count(n: int) -> None:

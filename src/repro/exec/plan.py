@@ -171,6 +171,12 @@ class AsyncPolicy:
     overlap_windows: bool = True
 
 
+# Rung 1 of the degradation ladder: the minimal-transient chunk/tile knobs
+# (the most serialized settings the AutoChunk candidate sets ever pick).
+_DEGRADED_MEMORY = dict(inference_chunk=1, opm_chunk=8, attn_kv_tile=32,
+                        tri_k_tile=16, opm_s_tile=16)
+
+
 @dataclass(frozen=True)
 class ExecutionPlan:
     """The composed execution policy. Frozen and hashable: equal plans hash
@@ -198,6 +204,21 @@ class ExecutionPlan:
 
     def with_async(self, **kw) -> "ExecutionPlan":
         return self.replace(duality=dataclasses.replace(self.duality, **kw))
+
+    def degrade(self) -> "ExecutionPlan | None":
+        """Next rung of the graceful-degradation ladder (the serving
+        engine's OOM fallback): (1) tighten every MemoryPolicy chunk/tile
+        knob to its minimal-transient setting (serializes compute, keeps
+        the kernel legs), then (2) drop to the jnp oracle kernel leg.
+        Returns ``None`` when fully degraded. Each rung is a plain frozen
+        plan — distinct hash, own jit cache entry — so fault-driven
+        fallbacks compose with ``use_plan`` scoping like any other plan."""
+        tight = dataclasses.replace(self.memory, **_DEGRADED_MEMORY)
+        if self.memory != tight:
+            return self.replace(memory=tight)
+        if self.kernels.enabled:
+            return self.with_kernels(enabled=False)
+        return None
 
     @classmethod
     def from_env(cls) -> "ExecutionPlan":

@@ -391,18 +391,57 @@ class DecoderPlan:
 
 
 def decoder_attention_bytes(cfg, *, n_slots: int, max_seq: int,
-                            q_block: int, kv_block: int) -> int:
+                            q_block: int, kv_block: int,
+                            seq_len: int | None = None) -> int:
     """Dominant serving-time bytes: the batched KV cache + the prefill
-    flash-attention probs block + logits. cfg is a ModelConfig."""
+    flash-attention probs block + logits. cfg is a ModelConfig.
+    ``seq_len`` bounds the prefill-phase terms to the actual prompt length
+    (admission queries); None models the worst case (= max_seq)."""
     hd = cfg.resolved_head_dim
     dt = 1 if getattr(cfg, "kv_cache_int8", False) else 2
+    s = min(seq_len or max_seq, max_seq)
     cache = cfg.n_layers * n_slots * max_seq * 2 * cfg.n_kv * hd * dt
-    qb = min(q_block or max_seq, max_seq)
-    kvb = min(kv_block or max_seq, max_seq)
+    qb = min(q_block or s, s)
+    kvb = min(kv_block or s, s)
     probs = cfg.n_heads * qb * kvb * 4              # fp32 block in the scan
-    acts = 3 * max_seq * cfg.n_heads * hd * 2
+    acts = 3 * s * cfg.n_heads * hd * 2
     logits = n_slots * cfg.vocab * 4
     return cache + probs + acts + logits
+
+
+@dataclass(frozen=True)
+class AdmissionCheck:
+    """Result of a serving-engine admission query (see
+    ``check_decoder_admission``)."""
+
+    fits: bool
+    est_bytes: int
+    budget_bytes: int
+    seq_len: int
+
+    def describe(self) -> str:
+        return (f"seq_len={self.seq_len} est={self.est_bytes >> 20}MB "
+                f"budget={self.budget_bytes >> 20}MB fits={self.fits}")
+
+
+_MIN_BLOCK = 32   # the most-shrunk attention block plan_decoder_blocks tries
+
+
+def check_decoder_admission(cfg, *, n_slots: int, max_seq: int,
+                            seq_len: int | None = None,
+                            budget_bytes: int = HBM_BYTES) -> AdmissionCheck:
+    """Admission query for the serving engine: can a request of
+    ``seq_len`` tokens run in an engine of (n_slots, max_seq) within
+    ``budget_bytes``? The engine can always degrade its attention blocks
+    (but not the KV-cache extent), so a request is admissible iff even the
+    most-shrunk block plan fits its plan's budget. Pure Python over static
+    shapes — safe to call per submit()."""
+    s = min(seq_len or max_seq, max_seq)
+    est = decoder_attention_bytes(
+        cfg, n_slots=n_slots, max_seq=max_seq,
+        q_block=min(_MIN_BLOCK, s), kv_block=min(_MIN_BLOCK, s),
+        seq_len=s)
+    return AdmissionCheck(est <= budget_bytes, est, budget_bytes, s)
 
 
 def plan_decoder_blocks(cfg, *, n_slots: int, max_seq: int,

@@ -19,15 +19,46 @@ Execution policy: the engine binds one ExecutionPlan (default: the ambient
 e.g. oracle-leg canary requests beside production pallas-leg requests in the
 same engine, with no process-global toggles. Each request's prefill runs
 under its own plan; decode steps group the active slots by plan and run one
-batched decode per distinct plan (each with its own jit wrapper, so plans
-never share a trace), committing only that group's cache rows — slots are
-independent in a decode step, so discarding the other rows is exact. The
-engine's HBM budget for the block planner defaults to the bound plan's
+batched decode per distinct plan (each with its own jit cache entry, so
+plans never share a trace), committing only that group's cache rows — slots
+are independent in a decode step, so discarding the other rows is exact.
+The engine's HBM budget for the block planner defaults to the bound plan's
 MemoryPolicy.
+
+Failure handling (the production story — every path deterministic under
+``resilience.inject_faults``, see repro/resilience/__init__.py for the full
+fault-site/retry/degradation matrix):
+
+  * Admission control. ``submit`` rejects, with typed ``AdmissionError``
+    backpressure, prompts over ``max_seq``, submissions past the bounded
+    pending queue (``max_pending``), and requests whose ``(plan, length)``
+    would exceed the ``check_decoder_admission`` HBM model under the plan's
+    ``MemoryPolicy.hbm_budget``. ``admission_control=False`` defers the HBM
+    check to admission time (queue-then-fail instead of reject-at-submit).
+  * Deadlines. ``submit(..., deadline=N)`` fails the request with
+    ``DeadlineExceeded`` once N engine steps elapse, queued or active.
+  * Retry. ``submit(..., retry=RetryPolicy(...))`` requeues retryable
+    failures (transient decode faults, stage timeouts, optionally
+    quarantined non-finite slots) through the slot teardown invariant with
+    capped exponential backoff measured in engine steps — the retry
+    re-prefills from scratch, so tokens are never lost or duplicated.
+  * Non-finite guard. Every decode group's logits carry an in-trace
+    per-slot finiteness flag (trace-time overhead only — outputs are
+    bit-identical with the guard in place); non-finite slots are
+    quarantined individually instead of poisoning the whole batch.
+  * Graceful degradation. OOM (injected ``OomFault`` or a real
+    RESOURCE_EXHAUSTED) retries the request under ``plan.degrade()`` rungs
+    (tighter MemoryPolicy chunks -> oracle kernel leg), recording each
+    fallback plan on ``Request.fallback_chain``; a request whose ladder is
+    exhausted fails typed.
+  * No livelock. ``run()`` detects a non-empty queue that can make no
+    progress (e.g. an over-budget plan with submit-time admission off) and
+    fails those requests typed instead of spinning.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Callable, Optional
 
 import jax
@@ -37,8 +68,11 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.exec.plan import ExecutionPlan, current_plan, use_plan
 from repro.launch.mesh import HBM_BYTES
-from repro.memory.autochunk import plan_decoder_blocks
+from repro.memory.autochunk import check_decoder_admission, plan_decoder_blocks
 from repro.models.decoder import init_cache, model_forward
+from repro.resilience.errors import AdmissionError, DeadlineExceeded
+from repro.resilience.faults import InjectedFault, NonFiniteFault, fire, is_oom
+from repro.resilience.retry import RetryPolicy
 
 
 @dataclass
@@ -50,9 +84,19 @@ class Request:
     eos_id: Optional[int] = None
     # execution plan this request runs under (engine default when None)
     plan: Optional[ExecutionPlan] = None
-    # outputs
+    # failure policy: deadline in engine steps, retry policy for transients
+    deadline: Optional[int] = None
+    retry: Optional[RetryPolicy] = None
+    # outputs / lifecycle
     generated: list = field(default_factory=list)
     done: bool = False
+    status: str = "queued"                 # queued | active | done | failed
+    error: Optional[BaseException] = None
+    attempts: int = 0                      # admissions started (prefills)
+    fallback_chain: list = field(default_factory=list)  # degraded plans
+    # internal scheduling state (engine steps)
+    _ready_step: int = 0
+    _deadline_step: Optional[int] = None
 
 
 def sample_token(logits, rng, temperature: float):
@@ -61,15 +105,42 @@ def sample_token(logits, rng, temperature: float):
     return jax.random.categorical(rng, logits / temperature, axis=-1)
 
 
+# Module-level jitted steps with the (hashable) config and plan as static
+# arguments: engines over the same model share traces — a chaos sweep
+# building 25 engines pays for each (cfg, plan, shape) trace once.
+
+@partial(jax.jit, static_argnames=("cfg", "plan", "max_cache_len"))
+def _prefill_step(params, prompt, *, cfg: ModelConfig, plan: ExecutionPlan,
+                  max_cache_len: int):
+    with use_plan(plan):
+        return model_forward(params, prompt, cfg, mode="prefill",
+                             max_cache_len=max_cache_len)
+
+
+@partial(jax.jit, static_argnames=("cfg", "plan"))
+def _decode_step(params, toks, cache, lengths, *, cfg: ModelConfig,
+                 plan: ExecutionPlan):
+    with use_plan(plan):
+        out = model_forward(params, toks, cfg, mode="decode", cache=cache,
+                            lengths=lengths)
+    # Per-slot non-finite guard, computed inside the trace (no extra host
+    # round-trip beyond this tiny flag vector, and no change to the logits).
+    finite = jnp.all(jnp.isfinite(out["logits"]), axis=(1, 2))
+    return out, finite
+
+
 class ServingEngine:
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
                  max_seq: int = 512, dtype=jnp.bfloat16,
                  auto_plan: bool = True, hbm_budget: int | None = None,
-                 plan: ExecutionPlan | None = None):
+                 plan: ExecutionPlan | None = None,
+                 max_pending: int | None = 256,
+                 admission_control: bool = True):
         self.params = params
         self.plan = plan if plan is not None else current_plan()
         if hbm_budget is None:
             hbm_budget = self.plan.memory.hbm_budget or HBM_BYTES
+        self._hbm_budget = hbm_budget
         if auto_plan:
             cfg, self.block_plan = plan_decoder_blocks(
                 cfg, n_slots=n_slots, max_seq=max_seq,
@@ -79,6 +150,8 @@ class ServingEngine:
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_seq = max_seq
+        self.max_pending = max_pending
+        self.admission_control = admission_control
         self.cache = init_cache(cfg, n_slots, max_seq, dtype)
         self.lengths = jnp.zeros((n_slots,), jnp.int32)
         self.slot_req: list[Optional[Request]] = [None] * n_slots
@@ -86,70 +159,197 @@ class ServingEngine:
         self.finished: list[Request] = []
         self._rng = jax.random.PRNGKey(0)
         self._next_uid = 0
-        # One jitted decode per distinct ExecutionPlan seen in traffic (the
-        # plan steers trace-time branches — wrappers must not be shared).
+        self._step_count = 0
+        # One decode entry per distinct ExecutionPlan seen in traffic (the
+        # plan steers trace-time branches — traces must not be shared).
         self._decode_fns: dict[ExecutionPlan, Callable] = {}
 
     def _decode_for(self, plan: ExecutionPlan):
         fn = self._decode_fns.get(plan)
         if fn is None:
-            def decode(params, toks, cache, lengths):
-                with use_plan(plan):
-                    return model_forward(params, toks, self.cfg,
-                                         mode="decode", cache=cache,
-                                         lengths=lengths)
-
-            fn = jax.jit(decode)
+            fn = partial(_decode_step, cfg=self.cfg, plan=plan)
             self._decode_fns[plan] = fn
         return fn
 
+    def _admission(self, req: Request):
+        budget = req.plan.memory.hbm_budget or self._hbm_budget
+        return check_decoder_admission(
+            self.cfg, n_slots=self.n_slots, max_seq=self.max_seq,
+            seq_len=int(req.prompt.shape[-1]), budget_bytes=budget)
+
     def submit(self, prompt: np.ndarray, *,
-               plan: ExecutionPlan | None = None, **kw) -> Request:
+               plan: ExecutionPlan | None = None,
+               deadline: int | None = None,
+               retry: RetryPolicy | None = None, **kw) -> Request:
         """Queue a request. ``plan`` overrides the engine's bound
-        ExecutionPlan for this request only (prefill + its decode group)."""
+        ExecutionPlan for this request only (prefill + its decode group);
+        ``deadline`` is a budget in engine steps; ``retry`` opts retryable
+        failures into slot-safe requeue with backoff. Raises
+        ``AdmissionError`` (typed backpressure) on over-length prompts, a
+        full pending queue, or a (plan, length) over the HBM model."""
         prompt = np.asarray(prompt, np.int32)
         if prompt.shape[-1] > self.max_seq:
             # Admitting an over-length prompt would prefill past the cache
             # extent and make every later decode step clamp its .at[].set
             # into the last cache row — silent KV corruption for the whole
             # batch. Reject at the API boundary instead.
-            raise ValueError(
+            raise AdmissionError(
                 f"prompt length {prompt.shape[-1]} exceeds the engine's "
                 f"max_seq={self.max_seq}")
+        if self.max_pending is not None and \
+                len(self.pending) >= self.max_pending:
+            raise AdmissionError(
+                f"pending queue full ({self.max_pending} requests): "
+                f"backpressure — drain or retry later")
         req = Request(uid=self._next_uid, prompt=prompt,
-                      plan=plan if plan is not None else self.plan, **kw)
+                      plan=plan if plan is not None else self.plan,
+                      deadline=deadline, retry=retry, **kw)
+        if self.admission_control:
+            chk = self._admission(req)
+            if not chk.fits:
+                raise AdmissionError(
+                    f"request would exceed the HBM model under its plan: "
+                    f"{chk.describe()}")
         self._next_uid += 1
+        if deadline is not None:
+            req._deadline_step = self._step_count + deadline
         self.pending.append(req)
         return req
 
     # --- internals ---
 
-    def _admit(self):
-        for slot in range(self.n_slots):
-            if self.slot_req[slot] is not None or not self.pending:
-                continue
-            req = self.pending.pop(0)
-            prompt = jnp.asarray(req.prompt)[None]            # (1, S)
-            with use_plan(req.plan):
-                out = model_forward(
-                    self.params, prompt, self.cfg, mode="prefill",
-                    max_cache_len=self.max_seq)
-            # scatter the single-row cache into this slot
-            self.cache = jax.tree.map(
-                lambda full, one: full.at[:, slot].set(one[:, 0]),
-                self.cache, out["cache"])
-            self.lengths = self.lengths.at[slot].set(len(req.prompt))
-            self.slot_req[slot] = req
-            # first generated token comes from the prefill logits
-            self._emit(slot, out["logits"][0, -1], req)
-
-    def _release(self, slot: int, req: Request):
-        """Finish a request and free its slot (single source of the slot
-        teardown invariant)."""
-        req.done = True
-        self.finished.append(req)
+    def _teardown(self, slot: int):
+        """Free a slot (single source of the teardown invariant — release,
+        failure, quarantine, and requeue all come through here)."""
         self.slot_req[slot] = None
         self.lengths = self.lengths.at[slot].set(0)
+
+    def _release(self, slot: int, req: Request):
+        """Finish a request successfully and free its slot."""
+        req.done = True
+        req.status = "done"
+        self.finished.append(req)
+        self._teardown(slot)
+
+    def _fail(self, slot: Optional[int], req: Request, err: BaseException):
+        """Terminate a request with a typed error (slot=None: not admitted)."""
+        if slot is not None:
+            self._teardown(slot)
+        req.status = "failed"
+        req.error = err
+        self.finished.append(req)
+
+    def _requeue(self, slot: Optional[int], req: Request, *, ready: int):
+        """Slot-safe requeue: tear the slot down through the same invariant
+        as release, discard the attempt's tokens (the retry re-prefills
+        from scratch — nothing is lost or duplicated), and queue at the
+        front, eligible from engine step ``ready``."""
+        if slot is not None:
+            self._teardown(slot)
+        req.generated = []
+        req.status = "queued"
+        req._ready_step = ready
+        self.pending.insert(0, req)
+
+    def _dispatch_failure(self, slot: Optional[int], req: Request,
+                          err: BaseException):
+        """Route a failure to its handler: OOM -> degradation ladder;
+        retryable under the request's policy -> requeue with backoff;
+        other typed faults -> fail. Unrecognized errors are bugs and
+        re-raise."""
+        if is_oom(err):
+            nxt = req.plan.degrade()
+            if nxt is not None:
+                req.fallback_chain.append(nxt)
+                req.plan = nxt
+                self._requeue(slot, req, ready=self._step_count + 1)
+            else:
+                self._fail(slot, req, err)
+            return
+        if isinstance(err, InjectedFault):
+            pol = req.retry
+            if pol is not None and pol.should_retry(err, req.attempts):
+                delay = pol.delay_steps(req.attempts, seed=req.uid)
+                self._requeue(slot, req, ready=self._step_count + delay)
+            else:
+                self._fail(slot, req, err)
+            return
+        raise err
+
+    def _poison_slot(self, slot: int):
+        """Injected NonFiniteFault: NaN the slot's floating cache rows so
+        the in-trace guard catches the corruption end to end (a requeued
+        request's re-prefill overwrites these rows)."""
+        def poison(x):
+            if jnp.issubdtype(x.dtype, jnp.floating):
+                return x.at[:, slot].set(jnp.nan)
+            return x
+
+        self.cache = jax.tree.map(poison, self.cache)
+
+    def _next_admissible(self) -> Optional[Request]:
+        """Pop the first pending request that is ready (backoff elapsed)
+        and fits the HBM model (FIFO among eligible)."""
+        for i, req in enumerate(self.pending):
+            if req._ready_step > self._step_count:
+                continue
+            if not self._admission(req).fits:
+                continue
+            return self.pending.pop(i)
+        return None
+
+    def _prefill(self, slot: int, req: Request) -> bool:
+        """Admit ``req`` into ``slot``. Returns False when a fault rerouted
+        the request (requeued or failed) instead."""
+        req.attempts += 1
+        prompt = jnp.asarray(req.prompt)[None]            # (1, S)
+        try:
+            for f in fire("prefill", step=self._step_count, slot=slot,
+                          uid=req.uid, attempt=req.attempts, plan=req.plan):
+                raise f
+            out = _prefill_step(self.params, prompt, cfg=self.cfg,
+                                plan=req.plan, max_cache_len=self.max_seq)
+        except Exception as err:
+            if not (isinstance(err, InjectedFault) or is_oom(err)):
+                raise
+            self._dispatch_failure(None, req, err)
+            return False
+        # scatter the single-row cache into this slot
+        self.cache = jax.tree.map(
+            lambda full, one: full.at[:, slot].set(one[:, 0]),
+            self.cache, out["cache"])
+        self.lengths = self.lengths.at[slot].set(len(req.prompt))
+        self.slot_req[slot] = req
+        req.status = "active"
+        # first generated token comes from the prefill logits
+        self._emit(slot, out["logits"][0, -1], req)
+        return True
+
+    def _admit(self) -> bool:
+        admitted = False
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] is not None:
+                continue
+            req = self._next_admissible()
+            if req is None:
+                break
+            admitted |= self._prefill(slot, req)
+        return admitted
+
+    def _expire_deadlines(self):
+        now = self._step_count
+        for slot, req in enumerate(self.slot_req):
+            if req is not None and req._deadline_step is not None \
+                    and now > req._deadline_step:
+                self._fail(slot, req, DeadlineExceeded(
+                    f"request {req.uid}: deadline of {req.deadline} engine "
+                    f"steps exceeded while active"))
+        for req in [r for r in self.pending if r._deadline_step is not None
+                    and now > r._deadline_step]:
+            self.pending.remove(req)
+            self._fail(None, req, DeadlineExceeded(
+                f"request {req.uid}: deadline of {req.deadline} engine "
+                f"steps exceeded while queued"))
 
     def _emit(self, slot: int, logits, req: Request):
         self._rng, sub = jax.random.split(self._rng)
@@ -172,12 +372,36 @@ class ServingEngine:
     def step(self):
         """One batched decode step across all active slots — one decode call
         per distinct request plan (slots in a decode step are independent, so
-        each plan group commits only its own cache rows and logits)."""
-        self._admit()
+        each plan group commits only its own cache rows and logits).
+        Returns True when anything progressed (decode, admission, release,
+        or a handled failure)."""
+        self._step_count += 1
+        terminal_before = len(self.finished)
+        self._expire_deadlines()
+        admitted = self._admit()
         self._retire_full()
-        active = [s for s, r in enumerate(self.slot_req) if r is not None]
+
+        def active_slots():
+            return [s for s, r in enumerate(self.slot_req) if r is not None]
+
+        active = active_slots()
         if not active:
-            return False
+            return admitted or len(self.finished) != terminal_before
+
+        # Decode-site fault injection, per slot, before the batched call.
+        for s in active:
+            req = self.slot_req[s]
+            for f in fire("decode", step=self._step_count, slot=s,
+                          uid=req.uid, attempt=req.attempts, plan=req.plan):
+                if isinstance(f, NonFiniteFault):
+                    self._poison_slot(s)      # the in-trace guard catches it
+                else:
+                    self._dispatch_failure(s, req, f)
+                    break
+        active = active_slots()
+        if not active:
+            return True
+
         toks = np.zeros((self.n_slots, 1), np.int32)
         for s in active:
             toks[s, 0] = self.slot_req[s].generated[-1]
@@ -189,33 +413,71 @@ class ServingEngine:
 
         new_cache = self.cache
         logits_by_slot: dict[int, jax.Array] = {}
+        finite_by_slot: dict[int, bool] = {}
+        decoded: list[int] = []
+        failed_groups = 0
         for plan_, slots in groups.items():
-            out = self._decode_for(plan_)(self.params, toks, self.cache,
-                                          self.lengths)
-            if len(groups) == 1:
+            try:
+                out, finite = self._decode_for(plan_)(
+                    self.params, toks, self.cache, self.lengths)
+            except Exception as err:
+                if not is_oom(err):
+                    raise
+                failed_groups += 1
+                for s in slots:
+                    self._dispatch_failure(s, self.slot_req[s], err)
+                continue
+            if len(groups) == 1 and not failed_groups:
                 new_cache = out["cache"]
             else:
                 idx = jnp.asarray(slots)
                 new_cache = jax.tree.map(
                     lambda acc, new: acc.at[:, idx].set(new[:, idx]),
                     new_cache, out["cache"])
+            finite = np.asarray(finite)
             logits = out["logits"][:, 0]
             for s in slots:
                 logits_by_slot[s] = logits[s]
+                finite_by_slot[s] = bool(finite[s])
+            decoded.extend(slots)
         self.cache = new_cache
         self.lengths = self.lengths + jnp.asarray(
-            [1 if self.slot_req[s] is not None else 0
+            [1 if (s in decoded and self.slot_req[s] is not None) else 0
              for s in range(self.n_slots)], jnp.int32)
-        for s in active:
+        for s in decoded:
             req = self.slot_req[s]
-            if req is not None:
-                self._emit(s, logits_by_slot[s], req)
+            if req is None:
+                continue
+            if not finite_by_slot[s]:
+                # Quarantine ONLY this slot: its logits are garbage and its
+                # cache row is poisoned, but slots are independent per step
+                # — the rest of the batch is untouched.
+                self._dispatch_failure(s, req, NonFiniteFault(
+                    f"request {req.uid}: non-finite logits in decode group "
+                    f"— slot {s} quarantined",
+                    site="decode", step=self._step_count, slot=s,
+                    uid=req.uid))
+                continue
+            self._emit(s, logits_by_slot[s], req)
         return True
 
     def run(self):
-        """Drain all pending + active requests; returns finished Requests."""
+        """Drain all pending + active requests; returns the terminal
+        Requests (``status`` 'done' or 'failed'). Never livelocks: a
+        non-empty queue that can make no progress — every request
+        inadmissible under its plan's HBM budget with no backoff pending —
+        fails typed instead of spinning."""
         while self.pending or any(r is not None for r in self.slot_req):
             progressed = self.step()
-            if not progressed and not self.pending:
+            if progressed:
+                continue
+            if not self.pending:
                 break
+            if any(r._ready_step > self._step_count for r in self.pending):
+                continue      # backoff timers still counting down
+            for req in list(self.pending):
+                self.pending.remove(req)
+                self._fail(None, req, AdmissionError(
+                    f"request {req.uid} can never be admitted: "
+                    f"{self._admission(req).describe()}"))
         return self.finished

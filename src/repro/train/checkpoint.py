@@ -1,7 +1,16 @@
 """Checkpointing: pytree <-> .npz with path-flattened keys + JSON metadata.
 
-Atomic (tmp + rename), keeps the last `keep` checkpoints, restores into the
-example tree's structure/dtypes (so bf16 params round-trip exactly).
+Crash-safe: writes land in a temp file (``.tmp_ckpt_*``) that is fsynced
+and atomically ``os.replace``d into place — a writer killed mid-write (the
+``checkpoint.save`` fault site simulates exactly this) leaves only temp
+debris and never a torn file at a checkpoint name. Readers are defensive
+anyway (a torn write can still slip through on exotic filesystems):
+``latest_checkpoint`` validates candidates newest-first, skipping AND
+garbage-collecting truncated/corrupt files instead of crashing on them, and
+``restore_checkpoint`` raises a typed ``CorruptCheckpointError`` rather
+than an opaque zipfile traceback. Keeps the last ``keep`` checkpoints;
+restores into the example tree's structure/dtypes (so bf16 params
+round-trip exactly).
 """
 from __future__ import annotations
 
@@ -9,9 +18,15 @@ import json
 import os
 import re
 import tempfile
+import zipfile
 
 import jax
 import numpy as np
+
+from repro.resilience.errors import CorruptCheckpointError
+from repro.resilience.faults import fire
+
+_TMP_PREFIX = ".tmp_ckpt_"
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -39,20 +54,45 @@ def _path_str(p) -> str:
     return str(p)
 
 
+def _valid_checkpoint(path: str) -> bool:
+    """True iff ``path`` is a structurally intact npz (zip) archive — a
+    truncated/torn file from a crashed writer fails the central-directory
+    walk or a member CRC check."""
+    try:
+        with zipfile.ZipFile(path) as z:
+            return z.testzip() is None
+    except (zipfile.BadZipFile, OSError, EOFError):
+        return False
+
+
 def save_checkpoint(directory: str, step: int, tree, *, keep: int = 3,
                     metadata: dict | None = None) -> str:
     os.makedirs(directory, exist_ok=True)
     flat = _flatten(tree)
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, prefix=_TMP_PREFIX,
+                               suffix=".npz")
     os.close(fd)
     with open(tmp, "wb") as f:
         np.savez(f, **flat)
+        f.flush()
+        os.fsync(f.fileno())
+    for fault in fire("checkpoint.save", step=step):
+        # Simulate the writer dying mid-write: truncate the temp file the
+        # way an interrupted write would and crash BEFORE the atomic
+        # publish — the previous checkpoint must stay the restorable one,
+        # and the debris is GC'd by the next successful save.
+        with open(tmp, "r+b") as f:
+            f.truncate(max(os.path.getsize(tmp) // 2, 1))
+        raise fault
     os.replace(tmp, path)
     meta = {"step": step}
     meta.update(metadata or {})
-    with open(path + ".json", "w") as f:
+    fd, mtmp = tempfile.mkstemp(dir=directory, prefix=_TMP_PREFIX,
+                                suffix=".json")
+    with os.fdopen(fd, "w") as f:
         json.dump(meta, f)
+    os.replace(mtmp, path + ".json")
     _gc(directory, keep)
     return path
 
@@ -67,20 +107,41 @@ def _gc(directory: str, keep: int):
         meta = os.path.join(directory, old + ".json")
         if os.path.exists(meta):
             os.remove(meta)
+    # Temp debris from crashed writers (see the checkpoint.save fault site).
+    for f in os.listdir(directory):
+        if f.startswith(_TMP_PREFIX):
+            os.remove(os.path.join(directory, f))
 
 
 def latest_checkpoint(directory: str) -> str | None:
+    """Newest *intact* checkpoint. Truncated/corrupt files (a writer that
+    died mid-write, a torn copy) are skipped — and GC'd along with their
+    metadata — instead of being returned or crashing the restore."""
     if not os.path.isdir(directory):
         return None
     ckpts = sorted(
         f for f in os.listdir(directory)
         if re.fullmatch(r"ckpt_\d+\.npz", f)
     )
-    return os.path.join(directory, ckpts[-1]) if ckpts else None
+    for name in reversed(ckpts):
+        path = os.path.join(directory, name)
+        if _valid_checkpoint(path):
+            return path
+        os.remove(path)
+        meta = path + ".json"
+        if os.path.exists(meta):
+            os.remove(meta)
+    return None
 
 
 def restore_checkpoint(path: str, example_tree):
-    """Restore into example_tree's structure, casting to its leaf dtypes."""
+    """Restore into example_tree's structure, casting to its leaf dtypes.
+    Raises ``CorruptCheckpointError`` (typed) on a truncated/corrupt file —
+    use ``latest_checkpoint`` to fall back to the newest intact one."""
+    if not _valid_checkpoint(path):
+        raise CorruptCheckpointError(
+            f"checkpoint {path} is truncated or corrupt; "
+            f"latest_checkpoint() skips such files")
     data = np.load(path)
     leaves_p, treedef = jax.tree_util.tree_flatten_with_path(example_tree)
     new_leaves = []
