@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Tier-1 CI, six legs — each leg is a named ExecutionPlan preset selected
+# Tier-1 CI, seven legs — each test leg is a named ExecutionPlan preset selected
 # through the single REPRO_PLAN entry point (resolved by the one env-compat
 # module, src/repro/exec/envcompat.py -> repro.exec.plan.PRESETS):
 #   1. default          — KernelPolicy(enabled=True): Pallas kernels on TPU;
@@ -26,20 +26,30 @@
 #                         fault schedule pinned via REPRO_FAULT_SEED
 #                         (resolved by envcompat.fault_seed) so the
 #                         randomized sweeps are reproducible in CI.
+#   7. analysis         — `python -m repro.analysis`: repro-lint (AST) over
+#                         src/repro plus the compiled-program contract
+#                         matrix on the default and oracle presets
+#                         (HLO/jaxpr contracts + modeled-vs-compiled peak
+#                         bytes, refreshing BENCH_contracts.json).
 # Any divergence between a kernel and its oracle fails fast in legs 1/3;
 # legs 2/4 prove the fallback paths stay healthy on their own.
-# Final grep gates assert (a) os.environ access stays confined to the
-# compat module (tests/test_exec_plan.py enforces the same in-suite), and
-# (b) no bare "except Exception:" outside src/repro/resilience/ — failure
-# handling must dispatch on the typed fault hierarchy, not swallow.
+# Leg 7 subsumes the two grep gates this script used to end with:
+#   - os.environ confined to src/repro/exec/envcompat.py is repro-lint rule
+#     R001 (strictly stronger: also catches `from os import environ`,
+#     `os.getenv`, and aliased accessors; tests/test_exec_plan.py enforces
+#     the same rule in-suite).
+#   - no bare "except Exception:" outside src/repro/resilience/ is rule
+#     R002 ("except Exception as err:" with typed re-dispatch stays fine —
+#     failures must stay typed so the engine's retry/degradation routing
+#     and the tests can see them).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "=== tier-1 leg 1/6: plan preset 'default' (XLA-native legs off-TPU) ==="
+echo "=== tier-1 leg 1/7: plan preset 'default' (XLA-native legs off-TPU) ==="
 python -m pytest -x -q "$@"
 
-echo "=== tier-1 leg 2/6: plan preset 'oracle' (REPRO_PLAN=oracle, jnp paths) ==="
+echo "=== tier-1 leg 2/7: plan preset 'oracle' (REPRO_PLAN=oracle, jnp paths) ==="
 REPRO_PLAN=oracle python -m pytest -x -q "$@"
 
 if [ "$#" -gt 0 ]; then
@@ -49,46 +59,34 @@ if [ "$#" -gt 0 ]; then
     exit 0
 fi
 
-echo "=== tier-1 leg 3/6: plan preset 'interpret' (Pallas interpret validation) ==="
+echo "=== tier-1 leg 3/7: plan preset 'interpret' (Pallas interpret validation) ==="
 REPRO_PLAN=interpret python -m pytest -x -q \
     tests/test_kernels.py tests/test_fused_attention.py tests/test_triangle.py
 
-echo "=== tier-1 leg 4/6: plan preset 'triangle-oracle' (pair-stack kernels -> oracles) ==="
+echo "=== tier-1 leg 4/7: plan preset 'triangle-oracle' (pair-stack kernels -> oracles) ==="
 REPRO_PLAN=triangle-oracle python -m pytest -x -q \
     tests/test_triangle.py tests/test_evoformer.py tests/test_fused_attention.py \
     tests/test_autochunk.py tests/test_alphafold.py
 
-echo "=== tier-1 leg 5/6: multi-device (8 host devices), both kernel legs ==="
+echo "=== tier-1 leg 5/7: multi-device (8 host devices), both kernel legs ==="
 XLA_FLAGS="--xla_force_host_platform_device_count=8" python -m pytest -x -q \
     tests/test_distributed.py tests/test_fused_attention.py tests/test_triangle.py
 XLA_FLAGS="--xla_force_host_platform_device_count=8" REPRO_PLAN=oracle \
     python -m pytest -x -q tests/test_distributed.py
 
-echo "=== tier-1 leg 6/6: resilience (fault injection + chaos), both kernel legs ==="
+echo "=== tier-1 leg 6/7: resilience (fault injection + chaos), both kernel legs ==="
 REPRO_FAULT_SEED=1234 python -m pytest -x -q \
     tests/test_resilience.py tests/test_serving.py
 REPRO_FAULT_SEED=1234 REPRO_PLAN=oracle python -m pytest -x -q \
     tests/test_resilience.py tests/test_serving.py
 
-echo "=== grep gate: os.environ confined to src/repro/exec/envcompat.py ==="
-stray=$(grep -rn "os\.environ" src/repro --include="*.py" \
-        | grep -v "repro/exec/envcompat.py" || true)
-if [ -n "$stray" ]; then
-    echo "$stray"
-    echo "ci.sh: FAIL — os.environ access outside the env-compat module"
-    exit 1
-fi
-
-echo "=== grep gate: no bare 'except Exception:' outside src/repro/resilience/ ==="
-# "except Exception as err:" with typed re-dispatch is fine; a bare handler
-# that can swallow anything is not — failures must stay typed so the
-# engine's retry/degradation routing (and tests) can see them.
-stray=$(grep -rnE "except Exception *:" src/repro --include="*.py" \
-        | grep -v "repro/resilience/" || true)
-if [ -n "$stray" ]; then
-    echo "$stray"
-    echo "ci.sh: FAIL — bare 'except Exception:' outside repro/resilience/"
-    exit 1
-fi
+echo "=== tier-1 leg 7/7: static analysis (repro-lint + compiled-program contracts) ==="
+# Replaces the old os.environ / bare-except grep gates (now lint rules R001
+# and R002 — see the header comment and repro/analysis/__init__.py for the
+# full rule/contract catalog). Lints src/repro, then lowers+compiles the
+# contract matrix on the default and oracle presets and cross-validates
+# AutoChunk's modeled peak against memory_analysis(), refreshing
+# BENCH_contracts.json. Nonzero exit on any finding or violation.
+python -m repro.analysis --presets default,oracle
 
 echo "ci.sh: all legs green"

@@ -1,0 +1,99 @@
+"""repro.analysis — static analysis of the source tree AND the compiled
+program, wired as one CI gate (`python -m repro.analysis`, ci.sh leg 7).
+
+The repo's hardest-won properties are invariants of *artifacts*: the AST
+(where a stray env read or a bare except lives) and the lowered HLO/jaxpr
+(where a merged-dim all-gather or a rematerialized transient lives). This
+package checks both, with stable IDs so a finding means the same thing in a
+test, in CI output, and in a suppression comment.
+
+Two passes, one runner:
+
+  lint.py       repro-lint — AST pass over src/repro.
+  contracts.py  declarative contracts over jit(...).lower().compile()
+                artifacts (HLO text, memory_analysis(), jaxpr primitives);
+                jax-free, so tests feed it canned HLO.
+  cells.py      the (config, ExecutionPlan preset, mesh) matrix the
+                contracts run against: Evoformer fwd/grad under GspmdDist
+                (all four attention sites + triangle/OPM), the shard-mapped
+                fused triangle/OPM ops, the reduced 2-block AlphaFold
+                dry-run, and the DAP shard_map stack + its jaxpr.
+  __main__.py   `python -m repro.analysis [--presets default,oracle]
+                [--lint-only|--contracts-only]` — prints findings, refreshes
+                BENCH_contracts.json, exits nonzero on any violation.
+
+Lint rules (scope in parentheses; full rationale strings in lint.RULES):
+
+  R001  env access outside exec/envcompat.py (everywhere else) — includes
+        `from os import environ`, `os.getenv`, and aliased accessors the
+        old ci.sh grep missed. Every process toggle must flow through the
+        one env-compat module into an ExecutionPlan field.
+  R002  bare `except Exception:` / `except:` (outside repro/resilience/) —
+        failure handling must see the typed fault hierarchy; a named
+        `except Exception as err:` with re-dispatch is allowed.
+  R003  wall-clock/host-RNG call in traced code (core/, kernels/, layers/,
+        models/, memory/, optim/, train/) — time.*, stdlib random.*,
+        np.random.*, datetime.now() are baked to trace-time constants
+        under jit; use jax.random keys and host-side timing.
+  R004  raw jnp/np einsum in an Evoformer/pair-stack module
+        (core/evoformer.py, core/alphafold.py) — the r²-scale contractions
+        must route through kernels/ops.py so kernel legs, AutoChunk tiling
+        and the DAP sharding hooks apply. Sanctioned materialized A/B
+        fallbacks carry per-line suppressions with a rationale.
+  R005  materialized softmax in an Evoformer/pair-stack module (same
+        scope) — jax.nn.softmax materializes the (..., r, r) probs tensor;
+        use ops.fused_attention / ops.fused_softmax.
+
+Suppression syntax (trailing on the flagged line, or on the line above):
+
+    o = jnp.einsum(...)  # repro-lint: disable=R004
+    # repro-lint: disable=R004,R005 -- rationale here
+    # repro-lint: disable-file=R003        (whole-file opt-out; prefer lines)
+
+Contracts (evaluated per matrix cell; rationale in contracts.py):
+
+  NoMergedAllGather(leads, min_rank)  no all-gather result with a merged
+      (B*G)/(B*I) leading dim — the flatten-forced-gather regression.
+      `assert_no_merged_allgather` is the same finder the distributed
+      tests call, so test and gate cannot drift.
+  NoInvoluntaryRemat()  no all-gather feeding a dynamic-slice in the same
+      computation (the static signature of resharding-via-full-
+      rematerialization; XLA's warning has no HLO marker).
+  CollectiveBudget(max_per_block)  static collective-op count per traced
+      block stays within budget (HLO defs or jaxpr primitives).
+  PeakBytesWithin(modeled, factor)  XLA's memory_analysis() peak within a
+      calibrated factor of AutoChunk's transient-bytes model, both
+      directions — keeps the admission-control model honest. Ratios are
+      persisted per cell to BENCH_contracts.json (the first perf-trajectory
+      artifact of ROADMAP open item 3).
+
+Adding a contract for a new kernel: write a cell builder in cells.py that
+lowers the kernel the way production runs it (under `use_plan(preset(...))`
++ the mesh), give it a `PeakBytesWithin` against its autochunk model term
+and a `NoMergedAllGather` with the shapes a flatten would produce, add its
+name to PEAK_FACTORS/COLLECTIVE_BUDGETS, run `python -m repro.analysis` to
+calibrate against the measured baseline, and check in the refreshed
+BENCH_contracts.json.
+
+This package (lint + contracts) imports no jax; only cells.py does, and the
+runner defers importing it until after the host device count is forced.
+"""
+from repro.analysis.contracts import (  # noqa: F401
+    CollectiveBudget,
+    CompiledArtifact,
+    NoInvoluntaryRemat,
+    NoMergedAllGather,
+    PeakBytesWithin,
+    Violation,
+    assert_no_merged_allgather,
+    check_all,
+    find_gather_then_slice,
+    find_merged_allgathers,
+)
+from repro.analysis.lint import (  # noqa: F401
+    Finding,
+    RULES,
+    lint_source,
+    lint_tree,
+    render_report,
+)

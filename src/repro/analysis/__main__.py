@@ -1,0 +1,103 @@
+"""`python -m repro.analysis` — the CI analysis gate (ci.sh leg 7).
+
+Runs repro-lint over the source tree, then the compiled-program contract
+matrix over the requested ExecutionPlan presets, prints a findings report,
+refreshes BENCH_contracts.json, and exits nonzero on any finding or
+violation.
+
+Arg parsing and the lint pass happen before jax ever imports: the host
+device count must be forced (via the one env-compat module) ahead of
+backend init, and `--lint-only` should work on a box with no backend at
+all.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro-lint (AST) + compiled-program contracts (HLO/"
+                    "jaxpr); nonzero exit on any finding/violation.")
+    ap.add_argument("--presets", default="default,oracle",
+                    help="comma-separated ExecutionPlan presets for the "
+                         "contract matrix (default: default,oracle)")
+    ap.add_argument("--devices", type=int, default=2,
+                    help="host device count for the contract meshes "
+                         "(default: 2)")
+    ap.add_argument("--lint-only", action="store_true",
+                    help="run only the AST pass (no jax import)")
+    ap.add_argument("--contracts-only", action="store_true",
+                    help="run only the contract matrix")
+    ap.add_argument("--cells", default="",
+                    help="comma-separated substrings filtering the contract "
+                         "cells (default: all; e.g. 'evoformer_fwd,dap')")
+    ap.add_argument("--bench-out", default="BENCH_contracts.json",
+                    help="where to write the contract-matrix records "
+                         "('' to skip)")
+    ap.add_argument("--lint-root", default=None,
+                    help="tree to lint (default: the installed src/repro)")
+    args = ap.parse_args(argv)
+
+    failed = False
+
+    if not args.contracts_only:
+        from repro.analysis import lint
+
+        findings = lint.lint_tree(args.lint_root)
+        print(lint.render_report(findings))
+        failed |= bool(findings)
+
+    if not args.lint_only:
+        # Must precede any jax import (cells.py imports jax at module top).
+        from repro.exec import envcompat
+
+        envcompat.force_host_device_count(args.devices)
+
+        from repro.analysis import cells
+
+        presets = [p for p in args.presets.split(",") if p]
+        selected = cells.CELLS
+        if args.cells:
+            pats = [c for c in args.cells.split(",") if c]
+            selected = tuple(c for c in cells.CELLS
+                             if any(p in c.__name__ for p in pats))
+            if not selected:
+                print(f"no contract cell matches {pats!r}")
+                return 1
+        violations, rows = cells.run_matrix(presets, cells=selected)
+        for row in rows:
+            status = "FAIL" if row["violations"] else "ok"
+            ratio = row["ratio"] if row["ratio"] is not None else "-"
+            print(f"contract {row['cell']}: {status} "
+                  f"(peak ratio {ratio}, "
+                  f"collectives {sum(row['collectives'].values())})")
+        for v in violations:
+            print(f"  VIOLATION {v.render()}")
+        print(f"contracts: {len(rows)} artifact(s), "
+              f"{len(violations)} violation(s)")
+        if args.cells and args.bench_out == ap.get_default("bench_out"):
+            # A filtered run must not clobber the checked-in full-matrix
+            # baseline; pass --bench-out explicitly to force a write.
+            args.bench_out = ""
+        if args.bench_out:
+            payload = {
+                "presets": presets,
+                "devices": args.devices,
+                "cells": rows,
+            }
+            with open(args.bench_out, "w", encoding="utf-8") as fh:
+                json.dump(payload, fh, indent=1, sort_keys=True)
+                fh.write("\n")
+            print(f"wrote {os.path.abspath(args.bench_out)}")
+        failed |= bool(violations)
+
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,223 @@
+"""Compiled-program contracts: declarative invariants over lowered artifacts.
+
+A `Contract` is a small frozen object whose ``check(artifact)`` returns
+`Violation`s found in a `CompiledArtifact` — the plain-data view of one
+``jit(...).lower().compile()`` result (HLO text + ``memory_analysis()`` peak
++ static collective counts). Cells (repro/analysis/cells.py) build artifacts
+for a matrix of (config, ExecutionPlan preset, mesh) programs; this module
+stays jax-free so contracts evaluate against canned HLO in tests and the
+runner can parse args before any backend initializes.
+
+The four contracts (full rationale in ``repro/analysis/__init__``):
+
+  NoMergedAllGather   no all-gather result whose leading dim is a merged
+                      (B*G)/(B*I) extent — the flatten-forced-gather
+                      regression PR 2/3 eliminated.
+  NoInvoluntaryRemat  no all-gather feeding a dynamic-slice in the same
+                      computation — the static signature of GSPMD
+                      materializing a full tensor only to re-slice it
+                      (resharding via full rematerialization).
+  CollectiveBudget    static collective-op count stays within a per-block
+                      budget (the scan body is traced once, so counts are
+                      per-block already).
+  PeakBytesWithin     XLA's actually-allocated peak agrees with AutoChunk's
+                      transient-bytes model within a factor, both ways —
+                      the cross-validation that keeps the admission-control
+                      model honest.
+
+``assert_no_merged_allgather`` is the shared test-side entry point: the
+distributed tests and the CI contract matrix call the same finder, so they
+cannot drift apart.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from repro.roofline.analysis import count_collective_ops
+
+# ---------------------------------------------------------------------------
+# Pure HLO finders
+# ---------------------------------------------------------------------------
+
+# An all-gather definition with its result shape: `= f32[32,16,8]{...} all-gather(`
+# (also matches the async `all-gather-start` form; `-done` re-states the
+# operand name, not a new gather).
+_AG_DEF_RE = re.compile(
+    r"=\s*(?:\(\s*)?\w+\[([0-9,]+)\][^=]*? all-gather(?:-start)?\(")
+
+
+def find_merged_allgathers(hlo_text: str, merged_leads, min_rank: int = 3):
+    """All-gather result shapes whose leading dim is one of ``merged_leads``
+    (with rank >= min_rank): the signature of a flatten that merged a
+    mesh-sharded (batch, group) pair and forced GSPMD to gather the whole
+    representation. Returns the offending dim lists."""
+    leads = set(merged_leads)
+    bad = []
+    for m in _AG_DEF_RE.finditer(hlo_text):
+        dims = [int(x) for x in m.group(1).split(",") if x]
+        if len(dims) >= min_rank and dims[0] in leads:
+            bad.append(dims)
+    return bad
+
+
+def assert_no_merged_allgather(hlo_text: str, merged_leads,
+                               min_rank: int = 3) -> None:
+    """Shared test-side assertion (tests/test_distributed.py and the CI
+    contract matrix both call this one finder)."""
+    bad = find_merged_allgathers(hlo_text, merged_leads, min_rank)
+    assert not bad, (
+        f"merged-dim all-gather(s) producing lead dims {sorted(merged_leads)} "
+        f"(rank >= {min_rank}): {bad}")
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=.*?\s([\w\-]+)\(")
+
+
+def find_gather_then_slice(hlo_text: str):
+    """(gather_name, slice_line) pairs where an all-gather's result is
+    consumed by a dynamic-slice in the same computation — XLA materialized
+    the full tensor only to slice a shard back out (involuntary full
+    rematerialization of the gathered operand; the compile-time warning has
+    no HLO marker, so this is its static signature)."""
+    pairs = []
+    gathered_in_comp: set[str] = set()
+    for line in hlo_text.splitlines():
+        if line.strip() == "}":
+            gathered_in_comp = set()     # computation boundary
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, op = m.group(1), m.group(2)
+        if op in ("all-gather", "all-gather-start", "all-gather-done"):
+            gathered_in_comp.add(name)
+        elif op == "dynamic-slice" and gathered_in_comp:
+            for operand in re.findall(r"%([\w.\-]+)", line.split("(", 1)[1]):
+                if operand in gathered_in_comp:
+                    pairs.append((operand, line.strip()))
+                    break
+    return pairs
+
+
+# ---------------------------------------------------------------------------
+# Artifact + contracts
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CompiledArtifact:
+    """Plain-data view of one lowered+compiled program (or jaxpr cell).
+
+    ``peak_bytes`` is ``memory_analysis()``'s peak (None when the backend
+    reports none); ``collective_counts`` may be pre-filled (the jaxpr cell
+    counts primitives, no HLO) and is otherwise derived from the text."""
+
+    name: str
+    hlo_text: str = ""
+    peak_bytes: int | None = None
+    collective_counts: dict | None = None
+
+    def counts(self) -> dict:
+        if self.collective_counts is None:
+            self.collective_counts = count_collective_ops(self.hlo_text)
+        return self.collective_counts
+
+
+@dataclass(frozen=True)
+class Violation:
+    contract: str
+    artifact: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.artifact}: {self.contract}: {self.message}"
+
+
+@dataclass(frozen=True)
+class NoMergedAllGather:
+    """No all-gather may produce a merged-lead tensor (see
+    ``find_merged_allgathers``)."""
+
+    merged_leads: frozenset
+    min_rank: int = 3
+    name: str = field(default="NoMergedAllGather", init=False)
+
+    def check(self, art: CompiledArtifact) -> list[Violation]:
+        bad = find_merged_allgathers(art.hlo_text, self.merged_leads,
+                                     self.min_rank)
+        return [Violation(self.name, art.name,
+                          f"all-gather produces merged-lead shape {dims} "
+                          f"(leads {sorted(self.merged_leads)}, "
+                          f"rank >= {self.min_rank})")
+                for dims in bad]
+
+
+@dataclass(frozen=True)
+class NoInvoluntaryRemat:
+    """No gather-then-slice resharding (see ``find_gather_then_slice``)."""
+
+    name: str = field(default="NoInvoluntaryRemat", init=False)
+
+    def check(self, art: CompiledArtifact) -> list[Violation]:
+        return [Violation(self.name, art.name,
+                          f"all-gather %{g} rematerializes a full tensor "
+                          f"then re-slices it: {line[:120]}")
+                for g, line in find_gather_then_slice(art.hlo_text)]
+
+
+@dataclass(frozen=True)
+class CollectiveBudget:
+    """Total static collective-op count <= max_per_block * blocks. The layer
+    scan's body is traced once, so the HLO count for an N-block stack IS the
+    per-block count (blocks=1); pass blocks>1 for unrolled programs."""
+
+    max_per_block: int
+    blocks: int = 1
+    name: str = field(default="CollectiveBudget", init=False)
+
+    def check(self, art: CompiledArtifact) -> list[Violation]:
+        counts = art.counts()
+        total = sum(counts.values())
+        budget = self.max_per_block * self.blocks
+        if total <= budget:
+            return []
+        return [Violation(self.name, art.name,
+                          f"{total} collective ops > budget {budget} "
+                          f"({self.max_per_block}/block x {self.blocks}): "
+                          f"{counts}")]
+
+
+@dataclass(frozen=True)
+class PeakBytesWithin:
+    """XLA's allocated peak within ``factor`` of the AutoChunk model, both
+    directions: compiled <= modeled*factor (the model is not lying low —
+    admission control would over-admit) AND modeled <= compiled*factor (the
+    model is not crying wolf — plans would over-serialize). Factors are
+    per-cell, calibrated on the checked-in BENCH_contracts.json baseline."""
+
+    modeled_bytes: int
+    factor: float
+    name: str = field(default="PeakBytesWithin", init=False)
+
+    def check(self, art: CompiledArtifact) -> list[Violation]:
+        if art.peak_bytes is None:
+            return [Violation(self.name, art.name,
+                              "backend reported no memory_analysis() peak")]
+        peak = art.peak_bytes
+        lo = self.modeled_bytes / self.factor
+        hi = self.modeled_bytes * self.factor
+        if lo <= peak <= hi:
+            return []
+        return [Violation(
+            self.name, art.name,
+            f"compiled peak {peak} outside modeled {self.modeled_bytes} "
+            f"x factor {self.factor} (allowed [{int(lo)}, {int(hi)}], "
+            f"ratio {peak / max(self.modeled_bytes, 1):.3f})")]
+
+
+def check_all(contracts, art: CompiledArtifact) -> list[Violation]:
+    out: list[Violation] = []
+    for c in contracts:
+        out.extend(c.check(art))
+    return out

@@ -1,0 +1,363 @@
+"""repro-lint: the AST half of the analysis gate (rule catalog in
+``repro/analysis/__init__``).
+
+Each rule has a stable ID (R001..R005) so suppressions and CI output survive
+renames. Rules are *scoped by module path* (relative to ``src/repro``, with
+"/" separators): an env read is a violation anywhere except the one compat
+module, a bare ``except Exception:`` anywhere except the resilience package,
+a wall-clock read only inside modules whose code runs under jit tracing, a
+raw ``jnp.einsum`` only in the Evoformer/pair-stack modules that must route
+hot paths through ``kernels/ops.py``.
+
+Suppression syntax (checked on the flagged line and the line directly above,
+so it works for both trailing comments and comment-above style)::
+
+    o = jnp.einsum("bikc,bjkc->bijc", a, b_full)  # repro-lint: disable=R004
+
+    # repro-lint: disable=R004 -- sanctioned materialized A/B fallback
+    o = jnp.einsum(...)
+
+A whole-file opt-out (``# repro-lint: disable-file=R003``) exists for
+modules whose *job* is the suppressed behavior; prefer per-line
+suppressions — they document exactly which statement is sanctioned and why.
+
+This module is pure Python (no jax import): the lint leg of
+``python -m repro.analysis`` runs before any backend initializes, and test
+fixtures lint source strings directly via ``lint_source``.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass
+
+# ---------------------------------------------------------------------------
+# Rule catalog
+# ---------------------------------------------------------------------------
+
+#: Module allowed to read/write the process environment (R001).
+ENVCOMPAT_MODULE = "exec/envcompat.py"
+
+#: Package allowed to catch bare ``Exception`` (R002): fault injection has to
+#: interpose on arbitrary failures before re-dispatching them typed.
+RESILIENCE_PREFIX = "resilience/"
+
+#: Modules whose function bodies run under jit tracing (R003): a wall-clock
+#: or host-RNG read there is either a silent constant (baked at trace time)
+#: or a trace break — both bugs.
+TRACED_PREFIXES = ("core/", "kernels/", "layers/", "models/", "memory/",
+                   "optim/", "train/")
+
+#: Evoformer / pair-stack modules whose hot paths must route through
+#: ``kernels/ops.py`` (R004/R005). Sanctioned materialized A/B fallbacks
+#: carry per-line suppressions with a rationale.
+PAIR_STACK_MODULES = ("core/evoformer.py", "core/alphafold.py")
+
+
+@dataclass(frozen=True)
+class Rule:
+    id: str
+    title: str
+    rationale: str
+
+
+RULES: dict[str, Rule] = {r.id: r for r in (
+    Rule("R001", "env access outside exec/envcompat.py",
+         "Every process-global toggle must map onto an ExecutionPlan field "
+         "through the single compat module; a stray os.environ/os.getenv "
+         "read (including aliased `from os import environ`) reintroduces "
+         "import-order-dependent flags the plan system was built to kill."),
+    Rule("R002", "bare `except Exception:` outside repro/resilience/",
+         "Failure handling must dispatch on the typed fault hierarchy "
+         "(resilience/errors.py); an anonymous catch-all can swallow "
+         "injected faults and admission/deadline errors the serving "
+         "engine's retry/degradation routing depends on seeing."),
+    Rule("R003", "wall-clock or host-RNG call in traced code",
+         "time.*/random.*/np.random/datetime.now inside a jit-traced module "
+         "is baked to a constant at trace time (or breaks the trace); "
+         "randomness must come from jax.random keys, timing from the host "
+         "side of the step loop."),
+    Rule("R004", "raw jnp.einsum in an Evoformer/pair-stack module",
+         "Pair-stack contractions are the r^2-scale hot paths; they must "
+         "route through kernels/ops.py (fused_attention / "
+         "fused_triangle_mult / fused_outer_product_mean) so kernel-leg "
+         "selection, AutoChunk tiling and the DAP sharding hooks apply. "
+         "The sanctioned materialized A/B fallbacks carry per-line "
+         "suppressions."),
+    Rule("R005", "materialized softmax in an Evoformer/pair-stack module",
+         "jax.nn.softmax materializes the (..., r, r) probs tensor; "
+         "attention must go through ops.fused_attention (online softmax) "
+         "or ops.fused_softmax (one-pass, unflattened under GSPMD)."),
+)}
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str        # path relative to the linted root, "/"-separated
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+
+_SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Z0-9,\s]+)")
+_SUPPRESS_FILE_RE = re.compile(r"#\s*repro-lint:\s*disable-file=([A-Z0-9,\s]+)")
+
+
+def _suppressed_rules(line_text: str) -> set[str]:
+    m = _SUPPRESS_RE.search(line_text)
+    if not m:
+        return set()
+    return {t.strip() for t in m.group(1).split(",") if t.strip()}
+
+
+def _file_suppressions(src: str) -> set[str]:
+    out: set[str] = set()
+    for m in _SUPPRESS_FILE_RE.finditer(src):
+        out |= {t.strip() for t in m.group(1).split(",") if t.strip()}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The visitor
+# ---------------------------------------------------------------------------
+
+_TIME_FUNCS = None      # any call on the time module is wall-clock/sleep
+_DATETIME_NOW = {"now", "utcnow", "today"}
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, relpath: str):
+        self.relpath = relpath
+        self.findings: list[tuple[str, int, str]] = []
+        # alias -> canonical module name, for modules we care about
+        self.mod_alias: dict[str, str] = {}
+        # names bound by `from os import environ as e` style imports
+        self.env_names: set[str] = set()
+
+        self.in_traced = relpath.startswith(TRACED_PREFIXES)
+        self.in_pair_stack = relpath in PAIR_STACK_MODULES
+        self.env_exempt = relpath == ENVCOMPAT_MODULE
+        self.exception_exempt = relpath.startswith(RESILIENCE_PREFIX)
+
+    # -- helpers ----------------------------------------------------------
+
+    def _flag(self, rule: str, node: ast.AST, message: str):
+        self.findings.append(
+            (rule, node.lineno, getattr(node, "end_lineno", node.lineno),
+             message))
+
+    def _root_module(self, node: ast.AST) -> str | None:
+        """Canonical module of an attribute chain root: `np.random.rand`
+        -> 'numpy', `os.environ` -> 'os', `jax.random.split` -> 'jax'."""
+        while isinstance(node, ast.Attribute):
+            node = node.value
+        if isinstance(node, ast.Name):
+            return self.mod_alias.get(node.id)
+        return None
+
+    def _attr_chain(self, node: ast.AST) -> list[str]:
+        parts: list[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if isinstance(node, ast.Name):
+            parts.append(node.id)
+        return parts[::-1]
+
+    # -- imports ----------------------------------------------------------
+
+    _TRACKED = {"os", "time", "random", "datetime", "numpy", "jax",
+                "jax.numpy", "numpy.random"}
+
+    def visit_Import(self, node: ast.Import):
+        for a in node.names:
+            if a.name in self._TRACKED:
+                self.mod_alias[a.asname or a.name.split(".")[0]] = a.name
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        if node.module == "os":
+            for a in node.names:
+                if a.name in ("environ", "environb", "getenv", "putenv",
+                              "unsetenv"):
+                    if not self.env_exempt:
+                        self._flag("R001", node,
+                                   f"`from os import {a.name}` aliases the "
+                                   "process environment outside "
+                                   f"{ENVCOMPAT_MODULE}")
+                    self.env_names.add(a.asname or a.name)
+        elif node.module in ("jax", "jax.numpy", "numpy"):
+            for a in node.names:
+                if a.name in ("numpy", "random"):
+                    self.mod_alias[a.asname or a.name] = \
+                        f"{node.module}.{a.name}"
+        self.generic_visit(node)
+
+    # -- R001: environment access -----------------------------------------
+
+    def visit_Attribute(self, node: ast.Attribute):
+        if not self.env_exempt and self._root_module(node) == "os":
+            chain = self._attr_chain(node)
+            if len(chain) >= 2 and chain[1] in ("environ", "environb"):
+                self._flag("R001", node,
+                           f"os.{chain[1]} access outside {ENVCOMPAT_MODULE}")
+        self.generic_visit(node)
+
+    # -- R002: bare except Exception --------------------------------------
+
+    def visit_ExceptHandler(self, node: ast.ExceptHandler):
+        if not self.exception_exempt and node.name is None:
+            t = node.type
+            if t is None:
+                self._flag("R002", node,
+                           "bare `except:` swallows typed failures")
+            elif (isinstance(t, ast.Name)
+                  and t.id in ("Exception", "BaseException")):
+                self._flag("R002", node,
+                           f"bare `except {t.id}:` outside "
+                           f"{RESILIENCE_PREFIX} — catch (or re-raise) the "
+                           "typed hierarchy, or bind it (`as err`) and "
+                           "re-dispatch")
+        self.generic_visit(node)
+
+    # -- calls: R001 (os.getenv), R003, R004, R005 ------------------------
+
+    def visit_Call(self, node: ast.Call):
+        func = node.func
+        chain = self._attr_chain(func)
+        root_mod = self._root_module(func) if chain else None
+
+        # R001: os.getenv()/os.putenv() and aliased environ()/getenv()
+        if not self.env_exempt:
+            if root_mod == "os" and len(chain) >= 2 and chain[1] in (
+                    "getenv", "putenv", "unsetenv"):
+                self._flag("R001", node,
+                           f"os.{chain[1]}() outside {ENVCOMPAT_MODULE}")
+            elif (isinstance(func, ast.Name)
+                  and func.id in self.env_names):
+                self._flag("R001", node,
+                           f"aliased env accessor `{func.id}()` outside "
+                           f"{ENVCOMPAT_MODULE}")
+
+        if self.in_traced:
+            self._check_traced_call(node, chain, root_mod)
+        if self.in_pair_stack:
+            self._check_pair_stack_call(node, chain, root_mod)
+        self.generic_visit(node)
+
+    def _check_traced_call(self, node, chain, root_mod):
+        # R003: wall clock / sleep — any call on the time module
+        if root_mod == "time":
+            self._flag("R003", node,
+                       f"time.{chain[-1]}() in traced module (baked to a "
+                       "trace-time constant under jit)")
+        # R003: stdlib random (jax.random resolves to 'jax...' — allowed)
+        elif root_mod == "random":
+            self._flag("R003", node,
+                       f"random.{chain[-1]}() in traced module — use "
+                       "jax.random keys")
+        # R003: numpy.random (np.random.* chains)
+        elif root_mod == "numpy.random" or (
+                root_mod == "numpy" and len(chain) >= 3
+                and chain[1] == "random"):
+            self._flag("R003", node,
+                       "numpy.random call in traced module — use "
+                       "jax.random keys")
+        # R003: datetime.now()/utcnow()/today()
+        elif root_mod == "datetime" and chain[-1] in _DATETIME_NOW:
+            self._flag("R003", node,
+                       f"datetime {chain[-1]}() in traced module")
+
+    def _check_pair_stack_call(self, node, chain, root_mod):
+        # R004: raw einsum (jnp.einsum / np.einsum / jax.numpy.einsum)
+        if chain and chain[-1] == "einsum" and root_mod in (
+                "jax", "jax.numpy", "numpy", "numpy.random"):
+            self._flag("R004", node,
+                       "raw einsum in a pair-stack module — route through "
+                       "kernels/ops.py (or suppress a sanctioned "
+                       "materialized A/B fallback)")
+        # R005: materialized softmax (jax.nn.softmax / nn.softmax)
+        if len(chain) >= 2 and chain[-1] == "softmax" and (
+                root_mod == "jax" or chain[0] == "nn"):
+            self._flag("R005", node,
+                       "materialized softmax in a pair-stack module — use "
+                       "ops.fused_attention / ops.fused_softmax")
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def lint_source(src: str, relpath: str) -> list[Finding]:
+    """Lint one module's source. ``relpath`` is the path relative to the
+    ``src/repro`` root ("/"-separated) — it decides which rules apply."""
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as err:
+        return [Finding("R000", relpath, err.lineno or 0,
+                        f"syntax error: {err.msg}")]
+    v = _Visitor(relpath)
+    v.visit(tree)
+    if not v.findings:
+        return []
+    lines = src.splitlines()
+    file_off = _file_suppressions(src)
+
+    def suppressed(rule: str, lineno: int, end_lineno: int) -> bool:
+        if rule in file_off:
+            return True
+        # Line above the flagged node, plus every line of the node itself
+        # (a trailing comment on any continuation line of a multiline call
+        # counts).
+        for ln in range(lineno - 1, (end_lineno or lineno) + 1):
+            if 1 <= ln <= len(lines) and rule in _suppressed_rules(
+                    lines[ln - 1]):
+                return True
+        return False
+
+    out: list[Finding] = []
+    seen: set[tuple[str, int]] = set()  # nested chains (x.environ.get)
+    for rule, line, end, msg in sorted(v.findings, key=lambda f: f[1]):
+        if (rule, line) in seen or suppressed(rule, line, end):
+            continue
+        seen.add((rule, line))
+        out.append(Finding(rule, relpath, line, msg))
+    return out
+
+
+def lint_tree(root: str | None = None) -> list[Finding]:
+    """Lint every .py module under ``root`` (default: the installed
+    ``src/repro`` tree this module lives in)."""
+    if root is None:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    findings: list[Finding] = []
+    for dirpath, _, files in os.walk(root):
+        for f in sorted(files):
+            if not f.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, f)
+            rel = os.path.relpath(path, root).replace(os.sep, "/")
+            with open(path, encoding="utf-8") as fh:
+                findings.extend(lint_source(fh.read(), rel))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+def render_report(findings: list[Finding]) -> str:
+    if not findings:
+        return "repro-lint: clean"
+    by_rule: dict[str, int] = {}
+    lines = [f.render() for f in findings]
+    for f in findings:
+        by_rule[f.rule] = by_rule.get(f.rule, 0) + 1
+    summary = ", ".join(f"{k} x{v}" for k, v in sorted(by_rule.items()))
+    lines.append(f"repro-lint: {len(findings)} finding(s) ({summary})")
+    return "\n".join(lines)

@@ -214,6 +214,27 @@ def evoformer_peak_bytes(
     return terms
 
 
+def modeled_evoformer_peak(
+    cfg,
+    *,
+    batch: int,
+    n_seq: int,
+    n_res: int,
+    dap: int = 1,
+    fused: bool = True,
+) -> int:
+    """Total modeled peak (sum of ``evoformer_peak_bytes`` terms) with the
+    cfg's OWN chunk/tile knobs — the single number the ``PeakBytesWithin``
+    contract (repro/analysis) cross-validates against what XLA's
+    ``memory_analysis()`` says the compiled program actually allocates."""
+    return sum(evoformer_peak_bytes(
+        cfg, batch=batch, n_seq=n_seq, n_res=n_res, dap=dap, fused=fused,
+        inference_chunk=cfg.inference_chunk, opm_chunk=cfg.opm_chunk,
+        attn_kv_tile=getattr(cfg, "attn_kv_tile", 0),
+        tri_k_tile=getattr(cfg, "tri_k_tile", 0),
+        opm_s_tile=getattr(cfg, "opm_s_tile", 0)).values())
+
+
 # ---------------------------------------------------------------------------
 # Evoformer planner
 # ---------------------------------------------------------------------------

@@ -151,6 +151,22 @@ def parse_collectives(hlo_text: str, default_group: int) -> CollectiveStats:
     return stats
 
 
+def count_collective_ops(hlo_text: str) -> dict[str, int]:
+    """Static per-op collective counts: each `= ... <op>(` definition counted
+    once, NO trip scaling (contrast parse_collectives, which models executed
+    volume). This is what the CollectiveBudget contract wants: the scan body
+    is traced once, so the static count is the per-block count. Async pairs
+    count once (the `-start`; `-done` only re-states the operand)."""
+    counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        for op in _COLLECTIVES:
+            if re.search(r"=\s*(?:\([^)]*\)|\w+\[[\d,]*\]\S*)\s+"
+                         + op + r"(-start)?\(", line):
+                counts[op] = counts.get(op, 0) + 1
+                break
+    return counts
+
+
 def cost_scale_factor(hlo_text: str) -> float:
     """cost_analysis() counts while bodies once; the dominant layer-stack loop
     multiplies real cost. We use the max product of nested trip counts as the

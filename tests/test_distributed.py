@@ -125,7 +125,7 @@ print("MINI_DRYRUN_OK", flops > 0)
 
 
 SHARDED_ATTN_SCRIPT = r"""
-import re, numpy as np, jax, jax.numpy as jnp
+import numpy as np, jax, jax.numpy as jnp
 from repro.core.dap import dap_evoformer_stack, shard_dap_inputs
 from repro.core.dist import GspmdDist, LocalDist
 from repro.core.evoformer import EvoformerConfig, init_evoformer_stack, \
@@ -196,20 +196,17 @@ if current_plan().kernels.enabled:
     print("GSPMD_FUSED_SITES_OK", calls[0])
 
 # No all-gather may produce a merged-(B*G, ...) tensor: the old flatten
-# forced GSPMD to gather the whole representation before the kernel.
-merged_leads = {B * s, B * r}
-bad = []
-for mt in re.finditer(r"=\s*\w+\[([0-9,]+)\][^=]*? all-gather", hlo):
-    dims = [int(x) for x in mt.group(1).split(",") if x]
-    if len(dims) >= 4 and dims[0] in merged_leads:
-        bad.append(dims)
-assert not bad, bad
+# forced GSPMD to gather the whole representation before the kernel. Same
+# finder as the CI contract matrix's NoMergedAllGather (repro.analysis) —
+# the test and the gate cannot drift apart.
+from repro.analysis.contracts import assert_no_merged_allgather
+assert_no_merged_allgather(hlo, {B * s, B * r}, min_rank=4)
 print("GSPMD_ATTN_OK", n_dev)
 """
 
 
 TRIANGLE_DIST_SCRIPT = r"""
-import re, numpy as np, jax, jax.numpy as jnp
+import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.core.dist import (GspmdDist, LocalDist, ShardMapDist,
                              shard_map_compat)
@@ -281,12 +278,9 @@ with (jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh):
 
 # No all-gather may produce a merged-(B*I, ...) tensor (the op's internal
 # j-block scan must run on local shards, not a gathered representation).
-bad = []
-for mt in re.finditer(r"=\s*\w+\[([0-9,]+)\][^=]*? all-gather", hlo):
-    dims = [int(x) for x in mt.group(1).split(",") if x]
-    if len(dims) >= 3 and dims[0] in {B * I, B * J}:
-        bad.append(dims)
-assert not bad, bad
+# Same finder as the CI contract matrix's NoMergedAllGather.
+from repro.analysis.contracts import assert_no_merged_allgather
+assert_no_merged_allgather(hlo, {B * I, B * J}, min_rank=3)
 print("GSPMD_TRI_OK", n_dev)
 
 # ---- ShardMapDist: ops on explicit local shards inside shard_map ----

@@ -280,25 +280,18 @@ def test_fastfold_facade_forward_train_serve(clean_env):
 
 
 # ---------------------------------------------------------------------------
-# the grep gate, enforced in tier-1 too
+# the env gate, enforced in tier-1 too
 # ---------------------------------------------------------------------------
 
 
-def test_no_os_environ_outside_envcompat():
-    """os.environ access under src/repro is confined to the single compat
-    module (exec/envcompat.py) — the same gate scripts/ci.sh greps for."""
+def test_no_env_access_outside_envcompat():
+    """Env access under src/repro is confined to the single compat module
+    (exec/envcompat.py) — repro-lint rule R001, the same gate ci.sh leg 7
+    runs. Strictly stronger than the old `os.environ` string scan: the AST
+    pass also catches `from os import environ` and `os.getenv` aliases."""
+    from repro.analysis.lint import lint_tree
+
     root = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
-    offenders = []
-    for dirpath, _, files in os.walk(root):
-        for f in files:
-            if not f.endswith(".py"):
-                continue
-            path = os.path.join(dirpath, f)
-            rel = os.path.relpath(path, root).replace(os.sep, "/")
-            if rel == "exec/envcompat.py":
-                continue
-            with open(path) as fh:
-                if "os.environ" in fh.read():
-                    offenders.append(rel)
+    offenders = [f.render() for f in lint_tree(root) if f.rule == "R001"]
     assert not offenders, (
-        f"os.environ accessed outside exec/envcompat.py: {offenders}")
+        f"env access outside exec/envcompat.py (R001): {offenders}")
