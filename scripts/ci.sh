@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Tier-1 CI, seven legs — each test leg is a named ExecutionPlan preset selected
+# Tier-1 CI, eight legs — each test leg is a named ExecutionPlan preset selected
 # through the single REPRO_PLAN entry point (resolved by the one env-compat
 # module, src/repro/exec/envcompat.py -> repro.exec.plan.PRESETS):
 #   1. default          — KernelPolicy(enabled=True): Pallas kernels on TPU;
@@ -31,6 +31,15 @@
 #                         matrix on the default and oracle presets
 #                         (HLO/jaxpr contracts + modeled-vs-compiled peak
 #                         bytes, refreshing BENCH_contracts.json).
+#   8. observability    — benchmarks/bench_serving.py --smoke drives a
+#                         mixed-length trace through the instrumented
+#                         ServingEngine under an obs tracer, refreshing
+#                         BENCH_serving.json (measured latency/throughput/
+#                         occupancy keyed by serialized ExecutionPlan);
+#                         `python -m repro.obs report --strict` then
+#                         schema-validates the JSONL event stream + the
+#                         bench artifact and checks the request-lifecycle
+#                         reconciliation invariant.
 # Any divergence between a kernel and its oracle fails fast in legs 1/3;
 # legs 2/4 prove the fallback paths stay healthy on their own.
 # Leg 7 subsumes the two grep gates this script used to end with:
@@ -46,10 +55,10 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "=== tier-1 leg 1/7: plan preset 'default' (XLA-native legs off-TPU) ==="
+echo "=== tier-1 leg 1/8: plan preset 'default' (XLA-native legs off-TPU) ==="
 python -m pytest -x -q "$@"
 
-echo "=== tier-1 leg 2/7: plan preset 'oracle' (REPRO_PLAN=oracle, jnp paths) ==="
+echo "=== tier-1 leg 2/8: plan preset 'oracle' (REPRO_PLAN=oracle, jnp paths) ==="
 REPRO_PLAN=oracle python -m pytest -x -q "$@"
 
 if [ "$#" -gt 0 ]; then
@@ -59,28 +68,28 @@ if [ "$#" -gt 0 ]; then
     exit 0
 fi
 
-echo "=== tier-1 leg 3/7: plan preset 'interpret' (Pallas interpret validation) ==="
+echo "=== tier-1 leg 3/8: plan preset 'interpret' (Pallas interpret validation) ==="
 REPRO_PLAN=interpret python -m pytest -x -q \
     tests/test_kernels.py tests/test_fused_attention.py tests/test_triangle.py
 
-echo "=== tier-1 leg 4/7: plan preset 'triangle-oracle' (pair-stack kernels -> oracles) ==="
+echo "=== tier-1 leg 4/8: plan preset 'triangle-oracle' (pair-stack kernels -> oracles) ==="
 REPRO_PLAN=triangle-oracle python -m pytest -x -q \
     tests/test_triangle.py tests/test_evoformer.py tests/test_fused_attention.py \
     tests/test_autochunk.py tests/test_alphafold.py
 
-echo "=== tier-1 leg 5/7: multi-device (8 host devices), both kernel legs ==="
+echo "=== tier-1 leg 5/8: multi-device (8 host devices), both kernel legs ==="
 XLA_FLAGS="--xla_force_host_platform_device_count=8" python -m pytest -x -q \
     tests/test_distributed.py tests/test_fused_attention.py tests/test_triangle.py
 XLA_FLAGS="--xla_force_host_platform_device_count=8" REPRO_PLAN=oracle \
     python -m pytest -x -q tests/test_distributed.py
 
-echo "=== tier-1 leg 6/7: resilience (fault injection + chaos), both kernel legs ==="
+echo "=== tier-1 leg 6/8: resilience (fault injection + chaos), both kernel legs ==="
 REPRO_FAULT_SEED=1234 python -m pytest -x -q \
     tests/test_resilience.py tests/test_serving.py
 REPRO_FAULT_SEED=1234 REPRO_PLAN=oracle python -m pytest -x -q \
     tests/test_resilience.py tests/test_serving.py
 
-echo "=== tier-1 leg 7/7: static analysis (repro-lint + compiled-program contracts) ==="
+echo "=== tier-1 leg 7/8: static analysis (repro-lint + compiled-program contracts) ==="
 # Replaces the old os.environ / bare-except grep gates (now lint rules R001
 # and R002 — see the header comment and repro/analysis/__init__.py for the
 # full rule/contract catalog). Lints src/repro, then lowers+compiles the
@@ -88,5 +97,17 @@ echo "=== tier-1 leg 7/7: static analysis (repro-lint + compiled-program contrac
 # AutoChunk's modeled peak against memory_analysis(), refreshing
 # BENCH_contracts.json. Nonzero exit on any finding or violation.
 python -m repro.analysis --presets default,oracle
+
+echo "=== tier-1 leg 8/8: observability (bench_serving smoke + schema validation) ==="
+# Measured perf-trajectory artifact: the smoke trace refreshes
+# BENCH_serving.json (rows keyed by serialized ExecutionPlan for the
+# default and oracle presets), then the obs report CLI schema-validates
+# the emitted JSONL + the artifact and enforces the lifecycle
+# reconciliation invariant (every request reaches exactly one terminal
+# state). --strict: any problem is a red gate.
+python benchmarks/bench_serving.py --smoke --out BENCH_serving.json \
+    --events-out /tmp/obs_serving.jsonl
+python -m repro.obs report /tmp/obs_serving.jsonl --bench BENCH_serving.json \
+    --strict
 
 echo "ci.sh: all legs green"

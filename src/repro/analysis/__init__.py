@@ -43,6 +43,10 @@ Lint rules (scope in parentheses; full rationale strings in lint.RULES):
   R005  materialized softmax in an Evoformer/pair-stack module (same
         scope) — jax.nn.softmax materializes the (..., r, r) probs tensor;
         use ops.fused_attention / ops.fused_softmax.
+  R006  print()/sys.stdout.write in a library module (everywhere except
+        obs/, analysis/, launch/, and __main__ entrypoints) — telemetry
+        from library code goes through the repro.obs event sink, not
+        ad-hoc stdout.
 
 Suppression syntax (trailing on the flagged line, or on the line above):
 

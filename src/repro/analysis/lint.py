@@ -1,7 +1,7 @@
 """repro-lint: the AST half of the analysis gate (rule catalog in
 ``repro/analysis/__init__``).
 
-Each rule has a stable ID (R001..R005) so suppressions and CI output survive
+Each rule has a stable ID (R001..R006) so suppressions and CI output survive
 renames. Rules are *scoped by module path* (relative to ``src/repro``, with
 "/" separators): an env read is a violation anywhere except the one compat
 module, a bare ``except Exception:`` anywhere except the resilience package,
@@ -54,6 +54,12 @@ TRACED_PREFIXES = ("core/", "kernels/", "layers/", "models/", "memory/",
 #: carry per-line suppressions with a rationale.
 PAIR_STACK_MODULES = ("core/evoformer.py", "core/alphafold.py")
 
+#: Scopes allowed to write to stdout/stderr directly (R006): the telemetry
+#: package itself, the analysis/report tooling, CLI launcher entrypoints,
+#: and any ``__main__`` module. Library code routes telemetry through the
+#: obs event sink instead.
+PRINT_EXEMPT_PREFIXES = ("obs/", "analysis/", "launch/")
+
 
 @dataclass(frozen=True)
 class Rule:
@@ -89,6 +95,12 @@ RULES: dict[str, Rule] = {r.id: r for r in (
          "jax.nn.softmax materializes the (..., r, r) probs tensor; "
          "attention must go through ops.fused_attention (online softmax) "
          "or ops.fused_softmax (one-pass, unflattened under GSPMD)."),
+    Rule("R006", "print()/ad-hoc stdout in a library module",
+         "Library code under src/repro/ must not write to stdout/stderr "
+         "directly — telemetry goes through the repro.obs event sink "
+         "(structured, scoped, schema-validated) so long-running loops "
+         "stay quiet and machine-readable. Exempt: obs/, analysis/, "
+         "launch/ CLI entrypoints, and __main__ modules."),
 )}
 
 
@@ -146,6 +158,8 @@ class _Visitor(ast.NodeVisitor):
         self.in_pair_stack = relpath in PAIR_STACK_MODULES
         self.env_exempt = relpath == ENVCOMPAT_MODULE
         self.exception_exempt = relpath.startswith(RESILIENCE_PREFIX)
+        self.print_exempt = (relpath.startswith(PRINT_EXEMPT_PREFIXES)
+                             or relpath.endswith("__main__.py"))
 
     # -- helpers ----------------------------------------------------------
 
@@ -174,7 +188,7 @@ class _Visitor(ast.NodeVisitor):
 
     # -- imports ----------------------------------------------------------
 
-    _TRACKED = {"os", "time", "random", "datetime", "numpy", "jax",
+    _TRACKED = {"os", "sys", "time", "random", "datetime", "numpy", "jax",
                 "jax.numpy", "numpy.random"}
 
     def visit_Import(self, node: ast.Import):
@@ -246,6 +260,21 @@ class _Visitor(ast.NodeVisitor):
                 self._flag("R001", node,
                            f"aliased env accessor `{func.id}()` outside "
                            f"{ENVCOMPAT_MODULE}")
+
+        # R006: ad-hoc stdout in library modules — telemetry goes through
+        # the obs event sink, not print()/sys.stdout.write.
+        if not self.print_exempt:
+            if isinstance(func, ast.Name) and func.id == "print":
+                self._flag("R006", node,
+                           "print() in a library module — emit through the "
+                           "repro.obs event sink (or move output to a "
+                           "__main__/launch entrypoint)")
+            elif (root_mod == "sys" and len(chain) >= 3
+                  and chain[1] in ("stdout", "stderr")
+                  and chain[2] in ("write", "writelines")):
+                self._flag("R006", node,
+                           f"sys.{chain[1]}.{chain[2]}() in a library "
+                           "module — emit through the repro.obs event sink")
 
         if self.in_traced:
             self._check_traced_call(node, chain, root_mod)

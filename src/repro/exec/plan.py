@@ -67,6 +67,7 @@ process flags before jax initializes.
 from __future__ import annotations
 
 import dataclasses
+import json
 from contextlib import contextmanager
 from contextvars import ContextVar
 from dataclasses import dataclass, field
@@ -229,6 +230,48 @@ class ExecutionPlan:
         from repro.exec import envcompat
 
         return envcompat.plan_from_env()
+
+    # -- serialization -------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        """Plain-JSON form of the full plan (every telemetry event and
+        BENCH_serving.json row records this, not a process-salted hash).
+        A live ``ParallelPolicy.mesh`` is a device handle, not data — plans
+        carrying one don't serialize."""
+        if self.parallel.mesh is not None:
+            raise ValueError(
+                "ExecutionPlan.to_dict: ParallelPolicy.mesh holds a live "
+                "device mesh; serialize the mesh-free plan and rebind the "
+                "mesh on load")
+        return {
+            "kernels": dataclasses.asdict(self.kernels),
+            "parallel": {"backend": self.parallel.backend,
+                         "axis": self.parallel.axis},
+            "memory": dataclasses.asdict(self.memory),
+            "duality": dataclasses.asdict(self.duality),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExecutionPlan":
+        """Inverse of ``to_dict`` — round-trips to an equal (and equal-hash)
+        plan, so a deserialized plan hits the same jit cache entries.
+        Policy ``__post_init__`` validation applies (bad legs raise)."""
+        return cls(
+            kernels=KernelPolicy(**d.get("kernels", {})),
+            parallel=ParallelPolicy(**d.get("parallel", {})),
+            memory=MemoryPolicy(**d.get("memory", {})),
+            duality=AsyncPolicy(**d.get("duality", {})),
+        )
+
+    def to_json(self) -> str:
+        """Canonical JSON (sorted keys): equal plans serialize to equal
+        strings, making the string itself a stable cross-process cache/
+        interning key — what python ``hash()`` (per-process salted) is not."""
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExecutionPlan":
+        return cls.from_dict(json.loads(s))
 
     def describe(self) -> str:
         k = self.kernels

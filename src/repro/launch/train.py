@@ -21,7 +21,7 @@ from repro.exec.plan import PRESETS, preset, use_plan
 from repro.layers.params import count_params
 from repro.models.decoder import init_model, lm_loss
 from repro.train.checkpoint import save_checkpoint
-from repro.train.loop import make_train_step
+from repro.train.loop import instrument_train_step, make_train_step
 
 
 def main():
@@ -38,10 +38,21 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--plan", default="default", choices=sorted(PRESETS),
                     help="ExecutionPlan preset the run executes under")
+    ap.add_argument("--trace", default=None, metavar="EVENTS.jsonl",
+                    help="record obs train_step telemetry to this JSONL "
+                         "file (inspect with `python -m repro.obs report`)")
     args = ap.parse_args()
 
     with use_plan(preset(args.plan)):
-        _run(args)
+        if args.trace:
+            from repro.obs import use_tracer
+
+            with use_tracer() as tr:
+                _run(args)
+            n = tr.dump_jsonl(args.trace)
+            print(f"wrote {args.trace} ({n} events)")
+        else:
+            _run(args)
 
 
 def _run(args):
@@ -55,7 +66,8 @@ def _run(args):
         base_lr=args.lr, warmup_steps=max(5, args.steps // 20),
         total_steps=args.steps, accum_steps=args.accum)
     state = init_state(params)
-    step_fn = jax.jit(train_step)
+    step_fn = instrument_train_step(
+        jax.jit(train_step), tokens_per_step=args.batch * args.seq)
 
     gen = lm_batches(vocab=cfg.vocab, batch=args.batch, seq=args.seq, seed=0)
     t0 = time.time()

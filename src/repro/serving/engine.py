@@ -70,6 +70,7 @@ from repro.exec.plan import ExecutionPlan, current_plan, use_plan
 from repro.launch.mesh import HBM_BYTES
 from repro.memory.autochunk import check_decoder_admission, plan_decoder_blocks
 from repro.models.decoder import init_cache, model_forward
+from repro.obs import trace as obs
 from repro.resilience.errors import AdmissionError, DeadlineExceeded
 from repro.resilience.faults import InjectedFault, NonFiniteFault, fire, is_oom
 from repro.resilience.retry import RetryPolicy
@@ -163,6 +164,48 @@ class ServingEngine:
         # One decode entry per distinct ExecutionPlan seen in traffic (the
         # plan steers trace-time branches — traces must not be shared).
         self._decode_fns: dict[ExecutionPlan, Callable] = {}
+        # Model facts for obs meta events + the roofline cross-reference,
+        # from array *metadata* only (no device sync).
+        leaves = jax.tree.leaves(self.params)
+        self._param_count = sum(x.size for x in leaves)
+        self._param_bytes = sum(x.size * x.dtype.itemsize for x in leaves)
+        self._cache_row_bytes = sum(
+            (x.size // n_slots // max_seq) * x.dtype.itemsize
+            for x in jax.tree.leaves(self.cache))
+        self._meta_emitted: set[int] = set()
+
+    # --- observability (every hook below is a no-op when no tracer is
+    # scoped — see repro/obs) ---
+
+    def _tr(self):
+        """Current tracer (or None), emitting the engine's run-metadata
+        event once per tracer."""
+        tr = obs.current_tracer()
+        if tr is not None and id(tr) not in self._meta_emitted:
+            self._meta_emitted.add(id(tr))
+            tr.emit("meta", "engine", attrs={
+                "model": self.cfg.name, "n_slots": self.n_slots,
+                "max_seq": self.max_seq,
+                "param_count": self._param_count,
+                "param_bytes": self._param_bytes,
+                "cache_row_bytes": self._cache_row_bytes,
+                "plan": self._plan_label(tr, self.plan)})
+        return tr
+
+    @staticmethod
+    def _plan_label(tr, plan: ExecutionPlan) -> str:
+        """Interned ``plan:N`` label for events — the full serialized plan
+        appears once in a ``def`` event; a live mesh (not serializable)
+        falls back to the describe() string."""
+        try:
+            val = plan.to_dict()
+        except ValueError:
+            val = plan.describe()
+        return tr.define("plan", val)
+
+    def _req_event(self, tr, phase: str, req: Optional[Request], **attrs):
+        tr.emit("request", phase,
+                uid=req.uid if req is not None else None, attrs=attrs)
 
     def _decode_for(self, plan: ExecutionPlan):
         fn = self._decode_fns.get(plan)
@@ -187,17 +230,24 @@ class ServingEngine:
         failures into slot-safe requeue with backoff. Raises
         ``AdmissionError`` (typed backpressure) on over-length prompts, a
         full pending queue, or a (plan, length) over the HBM model."""
+        tr = self._tr()
         prompt = np.asarray(prompt, np.int32)
         if prompt.shape[-1] > self.max_seq:
             # Admitting an over-length prompt would prefill past the cache
             # extent and make every later decode step clamp its .at[].set
             # into the last cache row — silent KV corruption for the whole
             # batch. Reject at the API boundary instead.
+            if tr is not None:
+                self._req_event(tr, "rejected", None, reason="over_length",
+                                prompt_len=int(prompt.shape[-1]))
             raise AdmissionError(
                 f"prompt length {prompt.shape[-1]} exceeds the engine's "
                 f"max_seq={self.max_seq}")
         if self.max_pending is not None and \
                 len(self.pending) >= self.max_pending:
+            if tr is not None:
+                self._req_event(tr, "rejected", None, reason="queue_full",
+                                queue_depth=len(self.pending))
             raise AdmissionError(
                 f"pending queue full ({self.max_pending} requests): "
                 f"backpressure — drain or retry later")
@@ -207,6 +257,10 @@ class ServingEngine:
         if self.admission_control:
             chk = self._admission(req)
             if not chk.fits:
+                if tr is not None:
+                    self._req_event(tr, "rejected", None, reason="hbm_model",
+                                    prompt_len=int(prompt.shape[-1]),
+                                    plan=self._plan_label(tr, req.plan))
                 raise AdmissionError(
                     f"request would exceed the HBM model under its plan: "
                     f"{chk.describe()}")
@@ -214,6 +268,12 @@ class ServingEngine:
         if deadline is not None:
             req._deadline_step = self._step_count + deadline
         self.pending.append(req)
+        if tr is not None:
+            self._req_event(tr, "queued", req,
+                            prompt_len=int(prompt.shape[-1]),
+                            plan=self._plan_label(tr, req.plan),
+                            queue_depth=len(self.pending),
+                            deadline=deadline)
         return req
 
     # --- internals ---
@@ -230,6 +290,13 @@ class ServingEngine:
         req.status = "done"
         self.finished.append(req)
         self._teardown(slot)
+        tr = self._tr()
+        if tr is not None:
+            self._req_event(tr, "done", req, slot=slot,
+                            step=self._step_count,
+                            tokens=len(req.generated),
+                            attempts=req.attempts,
+                            degraded=len(req.fallback_chain))
 
     def _fail(self, slot: Optional[int], req: Request, err: BaseException):
         """Terminate a request with a typed error (slot=None: not admitted)."""
@@ -238,6 +305,13 @@ class ServingEngine:
         req.status = "failed"
         req.error = err
         self.finished.append(req)
+        tr = self._tr()
+        if tr is not None:
+            self._req_event(tr, "failed", req, slot=slot,
+                            step=self._step_count,
+                            error=type(err).__name__,
+                            tokens=len(req.generated),
+                            attempts=req.attempts)
 
     def _requeue(self, slot: Optional[int], req: Request, *, ready: int):
         """Slot-safe requeue: tear the slot down through the same invariant
@@ -250,6 +324,11 @@ class ServingEngine:
         req.status = "queued"
         req._ready_step = ready
         self.pending.insert(0, req)
+        tr = self._tr()
+        if tr is not None:
+            self._req_event(tr, "retried", req, slot=slot,
+                            step=self._step_count, ready=ready,
+                            attempt=req.attempts)
 
     def _dispatch_failure(self, slot: Optional[int], req: Request,
                           err: BaseException):
@@ -262,6 +341,12 @@ class ServingEngine:
             if nxt is not None:
                 req.fallback_chain.append(nxt)
                 req.plan = nxt
+                tr = self._tr()
+                if tr is not None:
+                    self._req_event(tr, "degraded", req,
+                                    step=self._step_count,
+                                    rung=len(req.fallback_chain),
+                                    plan=self._plan_label(tr, nxt))
                 self._requeue(slot, req, ready=self._step_count + 1)
             else:
                 self._fail(slot, req, err)
@@ -303,12 +388,23 @@ class ServingEngine:
         the request (requeued or failed) instead."""
         req.attempts += 1
         prompt = jnp.asarray(req.prompt)[None]            # (1, S)
+        tr = self._tr()
+        if tr is not None:
+            self._req_event(tr, "admitted", req, slot=slot,
+                            step=self._step_count, attempt=req.attempts,
+                            prompt_len=int(req.prompt.shape[-1]),
+                            plan=self._plan_label(tr, req.plan))
         try:
             for f in fire("prefill", step=self._step_count, slot=slot,
                           uid=req.uid, attempt=req.attempts, plan=req.plan):
                 raise f
-            out = _prefill_step(self.params, prompt, cfg=self.cfg,
-                                plan=req.plan, max_cache_len=self.max_seq)
+            if tr is not None:
+                tr.jit_entry("prefill", self._plan_label(tr, req.plan))
+            out = obs.timed_call(
+                "prefill", _prefill_step, self.params, prompt, cfg=self.cfg,
+                plan=req.plan, max_cache_len=self.max_seq,
+                attrs={"uid": req.uid, "slot": slot,
+                       "prompt_len": int(req.prompt.shape[-1])})
         except Exception as err:
             if not (isinstance(err, InjectedFault) or is_oom(err)):
                 raise
@@ -321,6 +417,9 @@ class ServingEngine:
         self.lengths = self.lengths.at[slot].set(len(req.prompt))
         self.slot_req[slot] = req
         req.status = "active"
+        if tr is not None:
+            self._req_event(tr, "prefill", req, slot=slot,
+                            step=self._step_count)
         # first generated token comes from the prefill logits
         self._emit(slot, out["logits"][0, -1], req)
         return True
@@ -355,6 +454,7 @@ class ServingEngine:
         self._rng, sub = jax.random.split(self._rng)
         tok = int(sample_token(logits, sub, req.temperature))
         req.generated.append(tok)
+        obs.count("tokens", slot=slot, uid=req.uid)
         if (req.eos_id is not None and tok == req.eos_id) or \
                 len(req.generated) >= req.max_new_tokens:
             self._release(slot, req)
@@ -376,6 +476,14 @@ class ServingEngine:
         Returns True when anything progressed (decode, admission, release,
         or a handled failure)."""
         self._step_count += 1
+        tr = self._tr()
+        if tr is None:
+            return self._step_inner(None)
+        tr.gauge("queue_depth", len(self.pending), step=self._step_count)
+        with tr.span("engine.step", step=self._step_count):
+            return self._step_inner(tr)
+
+    def _step_inner(self, tr):
         terminal_before = len(self.finished)
         self._expire_deadlines()
         admitted = self._admit()
@@ -385,6 +493,8 @@ class ServingEngine:
             return [s for s, r in enumerate(self.slot_req) if r is not None]
 
         active = active_slots()
+        if tr is not None:
+            tr.gauge("occupancy", len(active), step=self._step_count)
         if not active:
             return admitted or len(self.finished) != terminal_before
 
@@ -418,8 +528,17 @@ class ServingEngine:
         failed_groups = 0
         for plan_, slots in groups.items():
             try:
-                out, finite = self._decode_for(plan_)(
-                    self.params, toks, self.cache, self.lengths)
+                if tr is not None:
+                    label = self._plan_label(tr, plan_)
+                    tr.jit_entry("decode", label)
+                    out, finite = tr.timed_call(
+                        "decode", self._decode_for(plan_),
+                        self.params, toks, self.cache, self.lengths,
+                        attrs={"plan": label, "batch": len(slots),
+                               "step": self._step_count})
+                else:
+                    out, finite = self._decode_for(plan_)(
+                        self.params, toks, self.cache, self.lengths)
             except Exception as err:
                 if not is_oom(err):
                     raise
@@ -452,12 +571,17 @@ class ServingEngine:
                 # Quarantine ONLY this slot: its logits are garbage and its
                 # cache row is poisoned, but slots are independent per step
                 # — the rest of the batch is untouched.
+                if tr is not None:
+                    self._req_event(tr, "quarantined", req, slot=s,
+                                    step=self._step_count)
                 self._dispatch_failure(s, req, NonFiniteFault(
                     f"request {req.uid}: non-finite logits in decode group "
                     f"— slot {s} quarantined",
                     site="decode", step=self._step_count, slot=s,
                     uid=req.uid))
                 continue
+            if tr is not None:
+                tr.count("tokens_decoded", slot=s, uid=req.uid)
             self._emit(s, logits_by_slot[s], req)
         return True
 
@@ -467,6 +591,10 @@ class ServingEngine:
         non-empty queue that can make no progress — every request
         inadmissible under its plan's HBM budget with no backoff pending —
         fails typed instead of spinning."""
+        with obs.span("engine.run"):
+            return self._run_inner()
+
+    def _run_inner(self):
         while self.pending or any(r is not None for r in self.slot_req):
             progressed = self.step()
             if progressed:

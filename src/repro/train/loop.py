@@ -50,6 +50,24 @@ def make_train_step(
         return loss, metrics, grads
 
     def train_step(state: TrainState, batch, rng=None):
+        """One optimizer step: ``(state, batch, rng) -> (state, metrics)``.
+
+        Stable metrics-key contract — every key below is present on EVERY
+        step (never conditionally), so downstream aggregation (obs
+        ``train_step`` events, CSV logs) sees a fixed schema:
+
+            loss             scalar training loss (micro-batch mean under
+                             gradient accumulation)
+            grad_norm        pre-clip global L2 norm of the gradients
+            lr               this step's scheduled learning rate
+            nonfinite_skips  1.0 when the non-finite guard discarded the
+                             update, else 0.0 (always 0.0 with
+                             ``guard_nonfinite=False``)
+
+        ``loss_fn`` aux metrics ride along unchanged; new always-present
+        keys may be added, but existing keys are never renamed, removed,
+        or made conditional.
+        """
         if accum_steps == 1:
             loss, metrics, grads = compute_grads(state.params, batch, rng)
         else:
@@ -76,6 +94,10 @@ def make_train_step(
 
         grads, gnorm = clip_by_global_norm(grads, clip_norm)
         metrics = dict(metrics)
+        # Contract: "loss" is always present, whether or not the loss_fn's
+        # aux dict reports one of its own (an aux "loss" wins — it may be
+        # the unscaled/per-token variant the caller prefers to log).
+        metrics.setdefault("loss", loss)
         if guard_nonfinite:
             # One non-finite leaf makes gnorm (the global L2) non-finite, so
             # this single scalar guards the whole grad tree. Feed zeros to
@@ -86,6 +108,10 @@ def make_train_step(
             grads = jax.tree.map(
                 lambda g: jnp.where(ok, g, jnp.zeros_like(g)), grads)
             metrics["nonfinite_skips"] = (~ok).astype(jnp.float32)
+        else:
+            # Guard off: the key is still reported (constant 0.0) so the
+            # metrics schema is never ragged across configurations.
+            metrics["nonfinite_skips"] = jnp.zeros((), jnp.float32)
         lr = cosine_schedule(state.step, base_lr, warmup_steps, total_steps)
         new_params, new_opt = opt_update(
             state.params, grads, state.opt_state, lr,
@@ -99,3 +125,40 @@ def make_train_step(
         return TrainState(state.step + 1, new_params, new_opt), metrics
 
     return init_state, train_step
+
+
+def instrument_train_step(step_fn, *, tokens_per_step: float | None = None,
+                          metric_keys=("loss", "grad_norm",
+                                       "nonfinite_skips")):
+    """Wrap an (optionally jitted) ``train_step`` so each call emits one
+    obs ``train_step`` event when a tracer is scoped — and is the identity
+    call (same objects returned, no added work beyond one contextvar read)
+    when none is.
+
+    Host-side wrapper by design: ``make_train_step`` callers jit the step
+    themselves, and anything inside the jitted function would run once at
+    trace time, not per step. The wrapper measures the host *dispatch*
+    time only (no ``block_until_ready`` — the hot path gains no sync) and
+    records the selected metric scalars as live device arrays; they are
+    resolved to floats when the tracer serializes, off the hot path.
+    ``tokens_per_step`` (e.g. batch * seq_len) rides along for throughput
+    aggregation."""
+    from repro.obs.trace import current_tracer, monotonic_ns
+
+    step_counter = [0]
+
+    def instrumented(state, batch, rng=None):
+        tr = current_tracer()
+        if tr is None:
+            return step_fn(state, batch, rng)
+        t0 = monotonic_ns()
+        state, metrics = step_fn(state, batch, rng)
+        dur = monotonic_ns() - t0
+        step_counter[0] += 1
+        tr.emit("train_step", "train_step", step=step_counter[0],
+                dur_ns=dur, tokens=tokens_per_step,
+                metrics={k: metrics[k] for k in metric_keys
+                         if k in metrics})
+        return state, metrics
+
+    return instrumented

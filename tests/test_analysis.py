@@ -147,6 +147,34 @@ def test_suppressions():
     assert rules_of(wrong, "core/evoformer.py") == ["R004"]
 
 
+def test_r006_print_and_stdout_fire_in_library_modules():
+    assert rules_of("print('debug')\n", "serving/engine.py") == ["R006"]
+    assert rules_of("import sys\nsys.stdout.write('x')\n",
+                    "train/loop.py") == ["R006"]
+    assert rules_of("import sys\nsys.stderr.writelines(['x'])\n",
+                    "core/foo.py") == ["R006"]
+
+
+def test_r006_quiet_twin_and_exempt_scopes():
+    # Telemetry/report/CLI scopes may print; __main__ entrypoints too.
+    for rel in ("obs/report.py", "obs/trace.py", "analysis/lint.py",
+                "launch/serve.py", "analysis/__main__.py",
+                "serving/__main__.py"):
+        assert rules_of("print('report line')\n", rel) == []
+    # The quiet twin: writes to ordinary file objects are not stdout.
+    quiet = ("def dump(fh, log):\n"
+             "    fh.write('x')\n"
+             "    log.writelines(['x'])\n")
+    assert rules_of(quiet, "serving/engine.py") == []
+
+
+def test_r006_suppression():
+    line = "print('sanctioned')  # repro-lint: disable=R006\n"
+    assert rules_of(line, "serving/engine.py") == []
+    wrong = "print('sanctioned')  # repro-lint: disable=R003\n"
+    assert rules_of(wrong, "serving/engine.py") == ["R006"]
+
+
 def test_lint_tree_clean_on_head():
     findings = lint_tree(REPRO)
     assert not findings, "\n".join(f.render() for f in findings)

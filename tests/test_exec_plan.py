@@ -284,6 +284,38 @@ def test_fastfold_facade_forward_train_serve(clean_env):
 # ---------------------------------------------------------------------------
 
 
+def test_plan_json_round_trip_all_presets():
+    """to_json/from_json round-trips every preset to an equal AND
+    equal-hash plan — a deserialized plan must hit the same jit cache
+    entries as the original (the hashability contract, extended across
+    process boundaries)."""
+    from repro.exec.plan import PRESETS
+
+    for name, plan in PRESETS.items():
+        back = ExecutionPlan.from_json(plan.to_json())
+        assert back == plan, name
+        assert hash(back) == hash(plan), name
+        # canonical form: equal plans serialize to equal strings
+        assert back.to_json() == plan.to_json(), name
+        d = plan.to_dict()
+        assert set(d) == {"kernels", "parallel", "memory", "duality"}, name
+        assert ExecutionPlan.from_dict(d) == plan, name
+
+
+def test_plan_serialization_validates_and_rejects_mesh():
+    degraded = preset("default").degrade()
+    assert ExecutionPlan.from_json(degraded.to_json()) == degraded
+    # from_dict goes through the policies' __post_init__ validation
+    bad = preset("default").to_dict()
+    bad["kernels"]["triangle"] = "quantum"
+    with pytest.raises(ValueError, match="triangle"):
+        ExecutionPlan.from_dict(bad)
+    # a live mesh is a device handle, not data
+    meshy = preset("default").with_parallel(backend="gspmd", mesh=object())
+    with pytest.raises(ValueError, match="mesh"):
+        meshy.to_dict()
+
+
 def test_no_env_access_outside_envcompat():
     """Env access under src/repro is confined to the single compat module
     (exec/envcompat.py) — repro-lint rule R001, the same gate ci.sh leg 7
